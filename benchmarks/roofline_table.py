@@ -1,0 +1,110 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts in experiments/.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--out experiments]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ARCH_ORDER = [
+    "nemotron-4-340b", "granite-34b", "qwen2-72b", "h2o-danube-3-4b",
+    "whisper-tiny", "zamba2-1.2b", "mixtral-8x7b", "deepseek-v2-236b",
+    "mamba2-1.3b", "internvl2-1b", "ds-paper-100m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(d):
+    a = ARCH_ORDER.index(d["arch"]) if d["arch"] in ARCH_ORDER else 99
+    s = SHAPE_ORDER.index(d["shape"]) if d["shape"] in SHAPE_ORDER else 99
+    return (a, s, d.get("mesh", ""))
+
+
+def load(outdir, sub):
+    rows = []
+    for f in glob.glob(os.path.join(outdir, sub, "*.json")):
+        rows.append(json.load(open(f)))
+    rows.sort(key=_key)
+    return rows
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(rows) -> str:
+    out = [
+        "| arch | shape | mesh | compile | policy | mem/dev (CPU-emul) | projected TPU | fits 16GiB | collectives |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | skip | {r['reason']} |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED | — | — | — | — | {r.get('error','')[:60]} |"
+            )
+            continue
+        m = r["memory"]
+        colls = ", ".join(f"{k}:{v}" for k, v in sorted(r["collective_counts"].items()))
+        pol = "+".join(r["policy"]["fsdp_axes"]) or "TP-only"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.0f}s "
+            f"| fsdp={pol},mb={r['microbatches']} | {m['per_device_gib']:.2f} GiB "
+            f"| {m['projected_tpu_gib']:.2f} GiB | {'Y' if m['fits_16gib_projected'] else 'N'} "
+            f"| {colls} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows) -> str:
+    out = [
+        "| arch | shape | compute | memory | collective | bound | MODEL_FLOPS/dev | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — | {r['reason'][:50]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED {r.get('error','')[:60]} ||||||||")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['model_flops_global'] / r['n_devices']:.2e} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments")
+    args = ap.parse_args(argv)
+    dr = load(args.out, "dryrun")
+    rf = load(args.out, "roofline")
+    print("## §Dry-run\n")
+    print(dryrun_table(dr))
+    print("\n## §Roofline (single-pod 16x16, per-device terms)\n")
+    print(roofline_table(rf))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

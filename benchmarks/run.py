@@ -1,0 +1,275 @@
+"""Benchmark harness — one benchmark per paper claim/figure.
+
+The paper's artifact is a control plane, so the "tables" are operational:
+the four-command lifecycle (Figure 1), queue-driven distribution,
+elastic scaling, spot fault tolerance, cheapest mode, and the idempotent
+restart path — plus the training/serving substrate benchmarks.
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def _ensure_noop_payload():
+    from repro.core.worker import PAYLOAD_REGISTRY, register_payload
+
+    if "bench-noop" not in PAYLOAD_REGISTRY:
+        @register_payload("bench-noop")
+        def _noop(job, ctx):
+            ctx.heartbeat()
+            return {}
+
+
+# ------------------------------------------------------------------ queue
+def bench_queue_throughput() -> None:
+    from repro.core import DurableQueue
+
+    with tempfile.TemporaryDirectory() as d:
+        q = DurableQueue(os.path.join(d, "q.sqlite"), default_visibility=60)
+        n = 2000
+        t0 = time.perf_counter()
+        q.send_batch([{"i": i} for i in range(n)])
+        t1 = time.perf_counter()
+        while True:
+            m = q.receive()
+            if m is None:
+                break
+            q.delete(m)
+        t2 = time.perf_counter()
+        emit("queue_send", (t1 - t0) / n * 1e6, f"{n / (t1 - t0):.0f} msgs/s")
+        emit("queue_recv_ack", (t2 - t1) / n * 1e6, f"{n / (t2 - t1):.0f} msgs/s")
+
+
+def bench_lifecycle() -> None:
+    """Figure 1: setup -> submitJob -> startCluster -> monitor, 64 noop jobs."""
+    from repro.core import DSConfig, DSRuntime, FleetFile, JobFile, SimRunner, VirtualClock
+
+    _ensure_noop_payload()
+    with tempfile.TemporaryDirectory() as d:
+        clk = VirtualClock()
+        cfg = DSConfig(app_name="B", payload="bench-noop", cluster_machines=4,
+                       machine_type=["sim.large"], machine_price=1.0, check_if_done=False)
+        rt = DSRuntime(cfg, store_root=d, clock=clk)
+        t0 = time.perf_counter()
+        rt.setup()
+        rt.submit_job(JobFile(groups=[{"g": i} for i in range(64)]))
+        rt.start_cluster(FleetFile(startup_seconds=5.0))
+        summary = SimRunner(rt, tick_seconds=60.0).run()
+        t1 = time.perf_counter()
+        emit(
+            "lifecycle_64jobs",
+            (t1 - t0) / 64 * 1e6,
+            f"done={summary.jobs_done};virtual_s={summary.wall_time:.0f};ticks={summary.ticks}",
+        )
+
+
+def bench_scaling_efficiency() -> None:
+    """Virtual completion time vs fleet size (fixed 64 jobs, 1 job/tick/worker)."""
+    from repro.core import DSConfig, DSRuntime, FleetFile, JobFile, SimRunner, VirtualClock
+
+    _ensure_noop_payload()
+    base = None
+    for machines in (1, 2, 4, 8, 16):
+        with tempfile.TemporaryDirectory() as d:
+            clk = VirtualClock()
+            cfg = DSConfig(app_name="S", payload="bench-noop", cluster_machines=machines,
+                           machine_type=["sim.large"], machine_price=1.0, check_if_done=False)
+            rt = DSRuntime(cfg, store_root=d, clock=clk)
+            rt.setup()
+            rt.submit_job(JobFile(groups=[{"g": i} for i in range(64)]))
+            rt.start_cluster(FleetFile(startup_seconds=0.0))
+            t0 = time.perf_counter()
+            s = SimRunner(rt, tick_seconds=60.0).run()
+            dt = time.perf_counter() - t0
+            if machines == 1:
+                base = s.ticks
+            eff = base / (s.ticks * machines)
+            emit(f"scaling_m{machines}", dt / 64 * 1e6, f"ticks={s.ticks};efficiency={eff:.2f}")
+
+
+def bench_fault_recovery() -> None:
+    """Completion overhead under spot preemption (paper: visibility timeout
+    + idempotent restart keep the run converging)."""
+    from repro.core import DSConfig, DSRuntime, FleetFile, JobFile, SimRunner, VirtualClock
+
+    _ensure_noop_payload()
+    base_ticks = None
+    for rate in (0.0, 2.0, 6.0):
+        with tempfile.TemporaryDirectory() as d:
+            clk = VirtualClock()
+            cfg = DSConfig(app_name="F", payload="bench-noop", cluster_machines=4,
+                           machine_type=["sim.small"], machine_price=1.0,
+                           cpu_shares=1024, memory_mb=1024,  # fits sim.small
+                           sqs_message_visibility=120.0, max_receive_count=10,
+                           check_if_done=False)
+            rt = DSRuntime(cfg, store_root=d, clock=clk)
+            rt.setup()
+            rt.submit_job(JobFile(groups=[{"g": i} for i in range(64)]))
+            rt.start_cluster(FleetFile(startup_seconds=0.0,
+                                       preemption_rate_per_hour=rate, market_seed=5))
+            t0 = time.perf_counter()
+            s = SimRunner(rt, tick_seconds=60.0).run(max_ticks=600)
+            dt = time.perf_counter() - t0
+            if rate == 0.0:
+                base_ticks = s.ticks
+            emit(
+                f"fault_recovery_rate{rate:g}",
+                dt * 1e6 / 64,
+                f"ticks={s.ticks};overhead={s.ticks / base_ticks:.2f}x;preempted={s.preemptions};done={s.jobs_done}",
+            )
+
+
+def bench_cheapest_mode() -> None:
+    """Machine-hours consumed: normal vs cheapest (paper Step 4)."""
+    from repro.core import DSConfig, DSRuntime, FleetFile, JobFile, SimRunner, VirtualClock
+
+    _ensure_noop_payload()
+    for cheapest in (False, True):
+        with tempfile.TemporaryDirectory() as d:
+            clk = VirtualClock()
+            cfg = DSConfig(app_name="C", payload="bench-noop", cluster_machines=8,
+                           machine_type=["sim.large"], machine_price=1.0,
+                           check_if_done=False)
+            rt = DSRuntime(cfg, store_root=d, clock=clk)
+            rt.setup()
+            rt.submit_job(JobFile(groups=[{"g": i} for i in range(240)]))
+            rt.start_cluster(FleetFile(startup_seconds=0.0))
+            t0 = time.perf_counter()
+            s = SimRunner(rt, tick_seconds=600.0, cheapest=cheapest).run(max_ticks=600)
+            dt = time.perf_counter() - t0
+            hours = 0.0
+            for inst in rt.fleet.instances.values():
+                end = inst.terminate_time if inst.terminate_time else clk.now()
+                hours += max(0.0, end - inst.launch_time) / 3600.0
+            emit(
+                f"cheapest_{'on' if cheapest else 'off'}",
+                dt * 1e6 / 240,
+                f"machine_hours={hours:.2f};virtual_s={s.wall_time:.0f};done={s.jobs_done}",
+            )
+
+
+# -------------------------------------------------------------- substrate
+def bench_checkpoint_io() -> None:
+    from repro.core.storage import ObjectStore
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    with tempfile.TemporaryDirectory() as d:
+        store = ObjectStore(d)
+        tree = {f"w{i}": jnp.ones((512, 1024), jnp.float32) * i for i in range(10)}
+        nbytes = sum(x.nbytes for x in tree.values())
+        t0 = time.perf_counter()
+        save_checkpoint(store, "bench", 0, tree)
+        t1 = time.perf_counter()
+        like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+        restore_checkpoint(store, "bench", 0, like)
+        t2 = time.perf_counter()
+        emit("checkpoint_save", (t1 - t0) * 1e6, f"{nbytes / (t1 - t0) / 1e6:.0f} MB/s")
+        emit("checkpoint_restore", (t2 - t1) * 1e6, f"{nbytes / (t2 - t1) / 1e6:.0f} MB/s")
+
+
+def bench_train_step() -> None:
+    from repro.configs import get_arch, reduced
+    from repro.models import Model, ModelRuntime
+    from repro.train.data import DataConfig, SyntheticLM
+    from repro.train.optimizer import AdamWConfig, init_opt_state
+    from repro.train.steps import TrainStepConfig, make_train_step
+
+    cfg = reduced(get_arch("ds-paper-100m"), n_layers=4, d_model=128, d_ff=512,
+                  vocab_size=2048)
+    model = Model(cfg, ModelRuntime())
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig()
+    opt = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(model, TrainStepConfig(opt=opt_cfg)),
+                   donate_argnums=(0, 1))
+    ds = SyntheticLM(cfg, DataConfig(seq_len=128, global_batch=8))
+    rng = jax.random.PRNGKey(0)
+    params, opt, _ = step(params, opt, ds.batch(0), rng)  # compile
+    jax.block_until_ready(params)
+    n = 10
+    t0 = time.perf_counter()
+    for i in range(n):
+        params, opt, m = step(params, opt, ds.batch(i + 1), rng)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / n
+    toks = 8 * 128
+    emit("train_step_tiny", dt * 1e6, f"{toks / dt:.0f} tokens/s")
+
+
+def bench_decode_throughput() -> None:
+    from repro.configs import get_arch, reduced
+    from repro.models import Model, ModelRuntime
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = reduced(get_arch("ds-paper-100m"), n_layers=4, d_model=128, d_ff=512,
+                  vocab_size=2048)
+    model = Model(cfg, ModelRuntime())
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_batch=4, max_len=64)
+    from repro.serving.engine import Request as Req
+
+    engine.submit([Req(uid=f"r{i}", prompt=[1, 2, 3], max_new_tokens=16)
+                   for i in range(8)])
+    t0 = time.perf_counter()
+    finished = engine.run_to_completion()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in finished)
+    emit("decode_engine", dt / max(toks, 1) * 1e6, f"{toks / dt:.0f} tokens/s")
+
+
+def bench_moe_dispatch() -> None:
+    """Gather vs scatter vs dense dispatch (the §Perf iteration, on CPU)."""
+    import dataclasses
+
+    from repro.configs import get_arch, reduced
+    from repro.models.moe import apply_moe, moe_init
+
+    cfg = dataclasses.replace(reduced(get_arch("mixtral-8x7b")),
+                              d_model=256, moe_d_ff=512, n_experts=8, top_k=2)
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32, 0.1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256, cfg.d_model))
+    for strat in ("dense", "capacity", "capacity_scatter"):
+        fn = jax.jit(lambda xx, s=strat: apply_moe(p, xx, cfg, s))
+        fn(x).block_until_ready()
+        n = 5
+        t0 = time.perf_counter()
+        for _ in range(n):
+            y = fn(x)
+        y.block_until_ready()
+        dt = (time.perf_counter() - t0) / n
+        emit(f"moe_dispatch_{strat}", dt * 1e6, f"{8 * 256 / dt:.0f} tokens/s")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_queue_throughput()
+    bench_lifecycle()
+    bench_scaling_efficiency()
+    bench_fault_recovery()
+    bench_cheapest_mode()
+    bench_checkpoint_io()
+    bench_train_step()
+    bench_decode_throughput()
+    bench_moe_dispatch()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""The generic worker — the paper's ``worker/generic-worker.py``.
+
+Loop contract (paper Step 3, automatic actions 5–6):
+
+1. poll the queue; if no visible jobs after a few polls, shut down;
+2. pre-flight ``CHECK_IF_DONE``: if the output prefix already holds
+   ``EXPECTED_NUMBER_FILES`` objects of at least ``MIN_FILE_SIZE_BYTES``
+   (optionally containing ``NECESSARY_STRING`` in the key), acknowledge
+   without recomputing — this is what makes whole-run resubmission cheap;
+3. run the payload with a heartbeat context; heartbeats extend the SQS
+   visibility lease so long jobs are not stolen, and raise
+   :class:`Preempted` the moment the instance is terminated so state is
+   abandoned mid-step exactly like a real spot kill;
+4. on success acknowledge (delete) the message; on failure do nothing —
+   the visibility timeout re-delivers, and the DLQ catches poison jobs.
+
+Payloads are looked up in a registry by name (the ``DOCKERHUB_TAG``
+analogue): signature ``payload(job: dict, ctx: WorkerContext) -> dict``.
+"""
+
+from __future__ import annotations
+
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+from .clock import Clock, WallClock
+from .cluster import TaskDefinition
+from .logs import LogGroup, MetricRegistry
+from .queue import DurableQueue, Message
+from .storage import ObjectStore
+
+
+class Preempted(Exception):
+    """Raised inside a payload when the hosting instance is terminated."""
+
+
+class NotReady(Exception):
+    """Raised by a payload whose prerequisite is not yet available (e.g. a
+    step-span job waiting for an earlier span's checkpoint).  The message
+    is released back to the queue after ``retry_in`` seconds without
+    consuming retry budget."""
+
+    def __init__(self, msg: str, retry_in: float = 10.0):
+        super().__init__(msg)
+        self.retry_in = retry_in
+
+
+PAYLOAD_REGISTRY: Dict[str, Callable[[dict, "WorkerContext"], dict]] = {}
+
+
+def register_payload(name: str):
+    """Decorator: register a "Something" under ``name``."""
+
+    def deco(fn):
+        PAYLOAD_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+@dataclass
+class WorkerContext:
+    """Everything a payload may touch, plus the heartbeat channel."""
+
+    store: ObjectStore
+    logs: LogGroup
+    metrics: MetricRegistry
+    clock: Clock
+    task: TaskDefinition
+    worker_id: str
+    message: Optional[Message] = None
+    queue: Optional[DurableQueue] = None
+    # liveness wiring
+    is_terminated: Callable[[], bool] = lambda: False
+    on_heartbeat: Callable[[], None] = lambda: None
+    visibility: float = 120.0
+    _last_extension: float = field(default=0.0)
+
+    def heartbeat(self, progress: Optional[str] = None) -> None:
+        """Payloads call this between units of work (e.g. every train step)."""
+        if self.is_terminated():
+            raise Preempted(f"instance hosting {self.worker_id} terminated")
+        self.on_heartbeat()
+        now = self.clock.now()
+        # extend the lease when half the visibility window has elapsed
+        if self.queue is not None and self.message is not None:
+            if now - self._last_extension > self.visibility / 2:
+                self.queue.change_visibility(self.message, self.visibility)
+                self._last_extension = now
+        if progress:
+            self.logs.put(self.worker_id, progress)
+
+    def log(self, message: str, **fields) -> None:
+        self.logs.put(self.worker_id, message, **fields)
+
+
+def check_if_done(store: ObjectStore, td: TaskDefinition, output_prefix: str) -> bool:
+    """The paper's done-check, verbatim semantics."""
+    if not td.check_if_done:
+        return False
+    n = 0
+    for info in store.list(output_prefix):
+        if info.size < td.min_file_size_bytes:
+            continue
+        if td.necessary_string and td.necessary_string not in info.key:
+            continue
+        n += 1
+    return n >= td.expected_number_files
+
+
+class Worker:
+    """One Docker-container-equivalent consuming jobs from the queue."""
+
+    def __init__(
+        self,
+        worker_id: str,
+        queue: DurableQueue,
+        store: ObjectStore,
+        logs: LogGroup,
+        metrics: MetricRegistry,
+        task: TaskDefinition,
+        *,
+        clock: Optional[Clock] = None,
+        visibility: float = 120.0,
+        empty_polls_before_shutdown: int = 3,
+        is_terminated: Callable[[], bool] = lambda: False,
+        on_heartbeat: Callable[[], None] = lambda: None,
+    ):
+        self.worker_id = worker_id
+        self.queue = queue
+        self.store = store
+        self.logs = logs
+        self.metrics = metrics
+        self.task = task
+        self.clock = clock or WallClock()
+        self.visibility = visibility
+        self.empty_polls_before_shutdown = empty_polls_before_shutdown
+        self.is_terminated = is_terminated
+        self.on_heartbeat = on_heartbeat
+        self.jobs_done = 0
+        self.jobs_failed = 0
+        self.jobs_skipped = 0
+        self.jobs_not_ready = 0
+
+    # -- single-message processing (used by both runners) --------------------
+    def process_one(self) -> Optional[str]:
+        """Receive and process at most one message.
+
+        Returns "done"/"skipped"/"failed"/"preempted" or ``None`` if the
+        queue had no visible message.
+        """
+        if self.is_terminated():
+            return "preempted"
+        msg = self.queue.receive(self.visibility)
+        if msg is None:
+            return None
+        job = msg.body
+        ctx = WorkerContext(
+            store=self.store,
+            logs=self.logs,
+            metrics=self.metrics,
+            clock=self.clock,
+            task=self.task,
+            worker_id=self.worker_id,
+            message=msg,
+            queue=self.queue,
+            is_terminated=self.is_terminated,
+            on_heartbeat=self.on_heartbeat,
+            visibility=self.visibility,
+        )
+        ctx._last_extension = self.clock.now()
+        output_prefix = job.get("output_prefix", "")
+        try:
+            if output_prefix and check_if_done(self.store, self.task, output_prefix):
+                ctx.log(f"CHECK_IF_DONE: {output_prefix} already complete, skipping")
+                self.queue.delete(msg)
+                self.jobs_skipped += 1
+                return "skipped"
+            payload = PAYLOAD_REGISTRY.get(self.task.payload)
+            if payload is None:
+                raise KeyError(f"no payload registered under {self.task.payload!r}")
+            if self.task.seconds_to_start:
+                # SECONDS_TO_START: stagger copies to avoid memory spikes
+                self.clock.sleep(self.task.seconds_to_start)
+            result = payload(job, ctx)
+            ctx.log("job complete", result=result)
+            self.queue.delete(msg)
+            self.jobs_done += 1
+            return "done"
+        except Preempted:
+            ctx.log("preempted mid-job; message will re-surface via visibility timeout")
+            return "preempted"
+        except NotReady as e:
+            ctx.log(f"job not ready ({e}); released for retry in {e.retry_in:.0f}s")
+            self.queue.release(msg, e.retry_in)
+            self.jobs_not_ready += 1
+            return "not_ready"
+        except Exception as e:  # noqa: BLE001 - worker must survive payload bugs
+            ctx.log(
+                f"job failed (attempt {msg.receive_count}/{self.queue.max_receive_count}): {e}",
+                traceback=traceback.format_exc(limit=20),
+            )
+            # fast-return with backoff: a failed job should not sit out its
+            # full (long) processing lease — e.g. a step-span waiting on a
+            # prerequisite checkpoint retries as earlier spans land
+            backoff = min(self.visibility, 5.0 * msg.receive_count)
+            self.queue.change_visibility(msg, backoff)
+            self.jobs_failed += 1
+            return "failed"
+
+    # -- the full loop (thread runner) ------------------------------------------
+    def run(self, poll_interval: float = 0.05) -> None:
+        empty = 0
+        while not self.is_terminated():
+            outcome = self.process_one()
+            if outcome is None:
+                empty += 1
+                if empty >= self.empty_polls_before_shutdown:
+                    # "If SQS tells them there are no visible jobs then they
+                    # shut themselves down."
+                    self.logs.put(self.worker_id, "queue empty; shutting down")
+                    return
+                self.clock.sleep(poll_interval)
+            elif outcome == "preempted":
+                return
+            else:
+                empty = 0

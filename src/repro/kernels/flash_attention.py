@@ -1,0 +1,144 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md): instead of a CUDA warp-level online-softmax,
+the kernel exploits the *sequential* TPU grid: the last grid dimension
+iterates over KV blocks in order, so the running (m, l, acc) state lives
+in VMEM scratch and carries across grid steps — no atomics, no
+shared-memory staging.  Q/K/V blocks are VMEM tiles via BlockSpec; the
+MXU sees (block_q x head_dim) @ (head_dim x block_k) matmuls with
+hardware-aligned 128-multiples.
+
+Causal and sliding-window masks are applied per tile; fully-masked tiles
+skip their matmuls (`pl.when`), which is the triangle-skipping the pure
+jnp path cannot express (EXPERIMENTS §Perf).
+
+Validated on CPU in interpret mode against ``ref.attention_reference``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # tile-level skip: tile is entirely masked out
+    run = ik >= 0  # traced "True"
+    if causal:
+        run = jnp.logical_and(run, ik * block_k <= iq * block_q + block_q - 1)
+    if window > 0:
+        run = jnp.logical_and(run, (ik + 1) * block_k - 1 > iq * block_q - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _writeback():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # (BH, Sq, hd)
+    k: jax.Array,  # (BH, Skv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q or skv % block_k:
+        raise ValueError(f"seq ({sq},{skv}) must divide blocks ({block_q},{block_k})")
+    nq, nk = sq // block_q, skv // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,127 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container), so the same call
+sites run the kernel bodies in Python on CPU for validation and compile
+the real mosaic kernels on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd import ssd_chunk_pallas
+
+
+def _default_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, hd) — model layout
+    k: jax.Array,  # (B, S, H, hd) (kv already repeated to H)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)  # noqa: E731
+    out = flash_attention_bhsd(
+        fold(q),
+        fold(k),
+        fold(v),
+        causal=causal,
+        window=sliding_window,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=_default_interpret(interpret),
+    )
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def ssd(
+    x: jax.Array,  # (b, l, h, p)
+    dt: jax.Array,  # (b, l, h)  (post-softplus)
+    A: jax.Array,  # (h,) negative
+    B: jax.Array,  # (b, l, n)
+    C: jax.Array,  # (b, l, n)
+    *,
+    chunk: int = 128,
+    block_h: int = 8,
+    initial_state: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: Pallas within-chunk kernel + jnp inter-chunk glue.
+
+    Same contract as `repro.models.ssm.ssd_chunked`.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    if l % chunk:
+        raise ValueError(f"seq {l} !% chunk {chunk}")
+    nc = l // chunk
+    if h % block_h:
+        block_h = h  # degrade to one head block
+
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    dAr = (dt * A).reshape(b, nc, chunk, h).astype(jnp.float32)
+    Br = B.reshape(b, nc, chunk, n)
+    Cr = C.reshape(b, nc, chunk, n)
+
+    y_diag, states = ssd_chunk_pallas(
+        xr, dAr, dtr, Br, Cr, block_h=block_h, interpret=_default_interpret(interpret)
+    )
+
+    # inter-chunk recurrence (cheap, O(nc) scan over (b,h,p,n) states)
+    cum = jnp.cumsum(dAr, axis=2)  # (b,nc,q,h)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,h)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    final, prev = jax.lax.scan(scan_fn, initial_state.astype(jnp.float32), xs)
+    prev = prev.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n) state entering each chunk
+
+    decay_out = jnp.exp(cum)  # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr.astype(jnp.float32), prev, decay_out)
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y, final
+
+
+def rmsnorm(
+    x: jax.Array,  # (..., d)
+    w: jax.Array,  # (d,)
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    shape = x.shape
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, shape[-1])
+    br = block_rows
+    while rows % br:
+        br //= 2
+    out = rmsnorm_pallas(
+        x2, w, eps=eps, block_rows=max(br, 1), interpret=_default_interpret(interpret)
+    )
+    return out.reshape(shape)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,  # (BH, Sq, hd)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Direct softmax attention with causal/sliding-window masking."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = jnp.logical_and(mask, kp <= qp)
+    if window > 0:
+        mask = jnp.logical_and(mask, kp > qp - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(x, dt, A, B, C, chunk):
+    """Full chunked-SSD oracle (shared with the model path)."""
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, A, B, C, chunk)
+
+
+def ssd_chunk_reference(x, dA, dt, B, C):
+    """Within-chunk term + per-chunk states (the kernel's exact contract).
+
+    x (b,nc,q,h,p); dA/dt (b,nc,q,h); B/C (b,nc,q,n) ->
+    (Y_diag (b,nc,q,h,p) fp32, states (b,nc,h,p,n) fp32)
+    """
+    cum = jnp.cumsum(dA.astype(jnp.float32), axis=2)  # (b,nc,q,h)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,q,q,h)
+    q = x.shape[2]
+    tri = (jnp.arange(q)[None, :] <= jnp.arange(q)[:, None])[None, None, :, :, None]
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", C.astype(jnp.float32), B.astype(jnp.float32))
+    M = scores[..., None] * L * dt[:, :, None, :, :]
+    y = jnp.einsum("bcijh,bcjhp->bcihp", M, x.astype(jnp.float32))
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dt
+    s = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", B.astype(jnp.float32), w, x.astype(jnp.float32))
+    return y, s
+
+
+def rmsnorm_reference(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)

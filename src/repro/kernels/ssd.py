@@ -1,0 +1,98 @@
+"""Mamba2 SSD within-chunk kernel (Pallas TPU).
+
+The chunked SSD algorithm splits into (a) a quadratic *within-chunk* term
+plus per-chunk state summaries — the compute hot-spot — and (b) a cheap
+linear inter-chunk recurrence.  This kernel computes (a) for one
+(batch, chunk, head-block) tile per grid step:
+
+    Y_diag[q,h,p] = sum_k C[q,:]·B[k,:] * exp(cum[q,h]-cum[k,h]) * dt[k,h] * x[k,h,p]   (k<=q)
+    state[h,p,n]  = sum_k exp(cum[end,h]-cum[k,h]) * dt[k,h] * x[k,h,p] * B[k,n]
+
+Heads are tiled (``block_h``) so the (q x q x block_h) decay tensor fits
+VMEM; q is the SSD chunk length (128 by default: MXU-aligned).  The
+inter-chunk scan and the low-rank Y_off einsum stay in jnp
+(`repro.kernels.ops.ssd`), mirroring how the paper's own implementation
+splits the work between the matmul engine and elementwise units.
+
+Validated in interpret mode against `repro.models.ssm.ssd_chunked`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, da_ref, dt_ref, b_ref, c_ref, y_ref, s_ref):
+    # blocks: x (1,1,q,hb,p); da/dt (1,1,q,hb); b/c (1,1,q,n)
+    x = x_ref[0, 0].astype(jnp.float32)  # (q, hb, p)
+    da = da_ref[0, 0].astype(jnp.float32)  # (q, hb)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (q, hb)
+    B = b_ref[0, 0].astype(jnp.float32)  # (q, n)
+    C = c_ref[0, 0].astype(jnp.float32)  # (q, n)
+    q = x.shape[0]
+
+    cum = jnp.cumsum(da, axis=0)  # (q, hb)
+    # decay matrix L[i,j,h] = exp(cum[i,h] - cum[j,h]) for j <= i
+    diff = cum[:, None, :] - cum[None, :, :]  # (q, q, hb)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = (jj <= ii)[:, :, None]
+    L = jnp.where(tri, jnp.exp(diff), 0.0)  # (q, q, hb)
+
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (q, q) = C[i,:]·B[j,:]
+    M = scores[:, :, None] * L * dt[None, :, :]  # (q, q, hb)
+
+    # Y_diag = einsum('ijh,jhp->ihp', M, x)
+    y = jnp.einsum("ijh,jhp->ihp", M, x, preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state = einsum('jn,jh,jhp->hpn', B, exp(cum[-1]-cum)*dt, x)
+    w = jnp.exp(cum[-1:, :] - cum) * dt  # (q, hb)
+    s = jnp.einsum("jn,jh,jhp->hpn", B, w, x, preferred_element_type=jnp.float32)
+    s_ref[0, 0] = s.astype(s_ref.dtype)
+
+
+def ssd_chunk_pallas(
+    x: jax.Array,  # (b, nc, q, h, p)
+    dA: jax.Array,  # (b, nc, q, h)
+    dt: jax.Array,  # (b, nc, q, h)
+    B: jax.Array,  # (b, nc, q, n)
+    C: jax.Array,  # (b, nc, q, n)
+    *,
+    block_h: int = 8,
+    interpret: bool = False,
+):
+    """Returns (Y_diag (b,nc,q,h,p) fp32, states (b,nc,h,p,n) fp32)."""
+    b, nc, q, h, p = x.shape
+    n = B.shape[-1]
+    block_h = min(block_h, h)
+    if h % block_h:
+        raise ValueError(f"heads {h} must divide block_h {block_h}")
+    nh = h // block_h
+
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(b, nc, nh),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, block_h, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, block_h), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, q, block_h), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, ci, hi: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, ci, hi: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, block_h, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, block_h, p, n), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dA, dt, B, C)

@@ -1,0 +1,298 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every applicable (architecture x input shape) cell this script
+lowers + compiles the production step on
+
+  - the single-pod mesh  (16, 16)    ("data", "model")   = 256 chips
+  - the multi-pod mesh   (2, 16, 16) ("pod", "data", "model") = 512 chips
+
+records ``compiled.memory_analysis()`` (does it fit 16 GiB/chip?) and
+``compiled.cost_analysis()``, and (optionally) runs the roofline probes
+(see repro.roofline.analysis for the methodology).
+
+The two lines at the very top of this file run BEFORE any jax import so
+the host platform exposes 512 placeholder devices; nothing here allocates
+device memory (ShapeDtypeStruct stand-ins only).
+
+Usage:
+    python -m repro.launch.dryrun --all
+    python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    python -m repro.launch.dryrun --arch mixtral-8x7b --roofline
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.configs import SHAPES, cell_applicable, get_arch, list_archs
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.mesh import TPU_V5E, make_production_mesh, n_chips
+from repro.roofline.analysis import (
+    CollectiveStats,
+    ProbeCost,
+    RooflineResult,
+    collective_bytes,
+    extrapolate,
+    model_flops,
+)
+from repro.roofline.hbm import hbm_traffic
+
+GiB = 1024**3
+
+
+def _analytic_arg_bytes(cell, mesh) -> int:
+    """Exact per-device bytes of all step inputs (params/opt/cache/batch)
+    from declared dtypes + shardings — immune to CPU bf16 emulation."""
+    import numpy as np
+    from repro.sharding.rules import axis_size
+
+    total = 0
+    for arg, sharding in zip(cell.args, cell.in_shardings):
+        leaves = jax.tree.leaves(arg)
+        shards = jax.tree.leaves(sharding, is_leaf=lambda x: hasattr(x, "spec"))
+        if len(shards) == 1 and len(leaves) > 1:
+            shards = shards * len(leaves)
+        for leaf, sh in zip(leaves, shards):
+            spec = tuple(sh.spec) if hasattr(sh, "spec") else ()
+            spec = spec + (None,) * (len(leaf.shape) - len(spec))
+            n = 1
+            for d, ax in zip(leaf.shape, spec):
+                n *= -(-d // axis_size(mesh, ax))
+            total += n * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def probe_layer_pair(cfg) -> Tuple[int, Optional[int]]:
+    """Reduced depths for the unrolled differencing probes."""
+    if cfg.family == "hybrid":
+        e = cfg.shared_attn_every
+        return e, 2 * e
+    if cfg.family == "moe" and cfg.first_k_dense:
+        return cfg.first_k_dense + 1, cfg.first_k_dense + 3
+    if cfg.n_layers <= 6:
+        return cfg.n_layers, None  # small enough: unroll exactly
+    return 2, 4
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, verbose: bool = True) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped", "reason": reason,
+        }
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh)
+    lowered = lower_cell(cell, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    per_dev = (
+        ma.argument_size_in_bytes
+        + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+    fits = per_dev <= TPU_V5E["hbm_bytes"]
+    # analytic state bytes (exact, from the input trees' declared dtypes and
+    # shardings) + emulation-corrected temp: the CPU backend upcasts bf16
+    # compute to f32, roughly doubling temp vs the TPU lowering.
+    state_bytes = _analytic_arg_bytes(cell, mesh)
+    # alias credit: donated outputs (cache/params) are updated in place on
+    # TPU; the CPU emulation materializes an extra converted copy in temp.
+    projected_temp = max(0.0, ma.temp_size_in_bytes / 2 - ma.alias_size_in_bytes)
+    projected = state_bytes + projected_temp
+    fits_projected = projected <= TPU_V5E["hbm_bytes"]
+    # collectives visible in the top-level module (scan bodies parsed too —
+    # presence proves the pod axis shards; bytes come from roofline probes)
+    txt = compiled.as_text()
+    colls = collective_bytes(txt, n_chips(mesh))
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "ok",
+        "policy": {
+            "fsdp_axes": list(cell.policy.fsdp_axes),
+            "tp_axis": cell.policy.tp_axis,
+        },
+        "microbatches": cell.microbatches,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_gib": ma.argument_size_in_bytes / GiB,
+            "output_gib": ma.output_size_in_bytes / GiB,
+            "temp_gib": ma.temp_size_in_bytes / GiB,
+            "alias_gib": ma.alias_size_in_bytes / GiB,
+            "per_device_gib": per_dev / GiB,
+            "fits_16gib": fits,
+            "state_gib_analytic": state_bytes / GiB,
+            "projected_tpu_gib": projected / GiB,
+            "fits_16gib_projected": fits_projected,
+        },
+        "entry_cost": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collective_counts": colls.count_by_op,
+    }
+    if verbose:
+        print(
+            f"[dryrun] {arch:18s} {shape_name:12s} {mesh_name:8s} "
+            f"compile={t2 - t1:6.1f}s mem/dev={per_dev / GiB:7.2f}GiB "
+            f"proj={projected / GiB:6.2f}GiB fits={'Y' if fits_projected else 'N'} "
+            f"colls={sum(colls.count_by_op.values())}"
+        )
+    return result
+
+
+def run_probe(arch: str, shape_name: str, layers: int, policy) -> ProbeCost:
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = dataclasses.replace(get_arch(arch), n_layers=layers)
+    cell = build_cell(
+        arch,
+        shape_name,
+        mesh,
+        cfg_override=cfg,
+        attn_impl="direct",
+        unroll_layers=True,
+        microbatches=1,
+        policy=policy,
+    )
+    lowered = lower_cell(cell, mesh)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = collective_bytes(txt, n_chips(mesh))
+    hbm = hbm_traffic(txt)
+    if hbm.has_while:
+        print(f"  [warn] probe {arch}/{shape_name} L={layers} still contains a while loop")
+    return ProbeCost(
+        flops=float(ca.get("flops", 0.0)),
+        bytes=hbm.bytes_flash,
+        collectives=colls,
+        bytes_jnp=hbm.bytes_jnp,
+        quadratic_bytes=hbm.quadratic_bytes,
+    )
+
+
+def run_roofline(arch: str, shape_name: str, *, verbose: bool = True) -> Dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=False)
+    # reuse the production cell's sharding policy for the probes
+    cell = build_cell(arch, shape_name, mesh)
+    l1, l2 = probe_layer_pair(cfg)
+    c1 = run_probe(arch, shape_name, l1, cell.policy)
+    if l2 is None:
+        flops, bytes_, bytes_jnp, coll = c1.flops, c1.bytes, c1.bytes_jnp, c1.collectives
+        pair = (l1, l1)
+    else:
+        c2 = run_probe(arch, shape_name, l2, cell.policy)
+        flops, bytes_, bytes_jnp, coll = extrapolate(c1, c2, l1, l2, cfg.n_layers)
+        pair = (l1, l2)
+    rr = RooflineResult(
+        arch=arch,
+        shape=shape_name,
+        n_layers=cfg.n_layers,
+        probe_layers=pair,
+        flops=flops,
+        bytes=bytes_,
+        bytes_jnp=bytes_jnp,
+        collective=coll,
+        model_flops_global=model_flops(cfg, shape),
+        n_devices=n_chips(mesh),
+    )
+    out = {"status": "ok", **rr.to_json()}
+    if verbose:
+        print(
+            f"[roofline] {arch:18s} {shape_name:12s} "
+            f"compute={rr.compute_s * 1e3:9.3f}ms memory={rr.memory_s * 1e3:9.3f}ms "
+            f"coll={rr.collective_s * 1e3:9.3f}ms dom={rr.dominant:10s} "
+            f"useful={rr.useful_ratio:5.2f} frac={rr.roofline_fraction:5.2f}"
+        )
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--roofline", action="store_true", help="also run roofline probes")
+    ap.add_argument("--roofline-only", action="store_true")
+    ap.add_argument("--out", default="experiments")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else [a for a in list_archs() if a != "ds-paper-100m"]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    os.makedirs(os.path.join(args.out, "dryrun"), exist_ok=True)
+    os.makedirs(os.path.join(args.out, "roofline"), exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not args.roofline_only:
+                meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+                for multi in meshes:
+                    mesh_name = "2x16x16" if multi else "16x16"
+                    path = os.path.join(
+                        args.out, "dryrun", f"{arch}__{shape}__{mesh_name}.json"
+                    )
+                    try:
+                        res = run_cell(arch, shape, multi)
+                    except Exception as e:  # noqa: BLE001
+                        res = {
+                            "arch": arch, "shape": shape, "mesh": mesh_name,
+                            "status": "error", "error": f"{type(e).__name__}: {e}",
+                            "traceback": traceback.format_exc(limit=8),
+                        }
+                        failures.append((arch, shape, mesh_name, str(e)))
+                        print(f"[dryrun] {arch} {shape} {mesh_name} FAILED: {e}")
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=2)
+            if args.roofline or args.roofline_only:
+                path = os.path.join(args.out, "roofline", f"{arch}__{shape}.json")
+                try:
+                    res = run_roofline(arch, shape)
+                except Exception as e:  # noqa: BLE001
+                    res = {
+                        "arch": arch, "shape": shape, "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc(limit=8),
+                    }
+                    failures.append((arch, shape, "roofline", str(e)))
+                    print(f"[roofline] {arch} {shape} FAILED: {e}")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=2)
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print("\nall requested cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,46 @@
+"""Production meshes.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; smoke tests and benchmarks see the 1 real CPU device.
+
+Target hardware: TPU v5e, 256 chips/pod.
+  peak bf16:   197 TFLOP/s / chip
+  HBM:         16 GiB @ 819 GB/s / chip
+  ICI:         ~50 GB/s / link
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+TPU_V5E = {
+    "peak_flops": 197e12,  # bf16 FLOP/s per chip
+    "hbm_bytes": 16 * 1024**3,
+    "hbm_bw": 819e9,  # B/s per chip
+    "ici_bw": 50e9,  # B/s per link
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh over host devices for distribution tests."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def n_chips(mesh: Mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

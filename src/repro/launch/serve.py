@@ -1,0 +1,57 @@
+"""``distributed-serve`` — the serving "Something".
+
+A job is a batch of generation requests; the worker builds the model
+(from a checkpoint when ``run`` is set, fresh weights otherwise), runs
+the continuous-batching engine, and writes completions to the output
+prefix.  Each engine step heartbeats.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from repro.core.worker import WorkerContext, register_payload
+from repro.launch.train import build_model
+from repro.serving.engine import Request, ServeEngine
+from repro.train.checkpoint import latest_step, restore_checkpoint
+
+
+@register_payload("distributed-serve")
+def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
+    model = build_model(job)
+    run = job.get("run")
+    if run:
+        step = latest_step(ctx.store, run)
+        if step is None:
+            raise RuntimeError(f"no checkpoint for run {run!r}")
+        like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params, _ = restore_checkpoint(ctx.store, run, step, like)
+    else:
+        params = model.init(jax.random.PRNGKey(job.get("init_seed", 0)))
+
+    prompts = job["prompts"]  # list of token-id lists
+    max_new = int(job.get("max_new_tokens", 8))
+    engine = ServeEngine(
+        model,
+        params,
+        max_batch=int(job.get("max_batch", 4)),
+        max_len=int(job.get("max_len", 128)),
+        heartbeat=lambda: ctx.heartbeat(),
+    )
+    engine.submit(
+        [
+            Request(uid=f"req{i}", prompt=[int(t) for t in p], max_new_tokens=max_new,
+                    temperature=float(job.get("temperature", 0.0)))
+            for i, p in enumerate(prompts)
+        ]
+    )
+    finished = engine.run_to_completion()
+    results = {
+        r.uid: {"prompt": r.prompt, "completion": r.output} for r in finished
+    }
+    out = job.get("output_prefix", "serve/batch0")
+    ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results,
+                                               "engine_steps": engine.steps_executed})
+    return {"n_requests": len(finished), "engine_steps": engine.steps_executed}

@@ -1,0 +1,171 @@
+"""``distributed-train`` — the training "Something".
+
+A job is a **step span** ``{arch, run, start_step, num_steps, ...}``:
+checkpoint-delimited so every job is idempotent (the paper's
+CHECK_IF_DONE generalized to training state):
+
+- pre-flight: if the span's DONE marker exists the worker skips it
+  (handled by the generic worker's check_if_done);
+- prerequisite: a span with ``start_step > 0`` requires a checkpoint at
+  (or inside) the span; if missing, the job *fails fast* and resurfaces
+  via the visibility timeout until an earlier span produces it — "submit
+  everything, only missing work recomputes";
+- mid-span preemption: intra-span checkpoints every ``ckpt_every`` steps
+  mean a replacement worker resumes from the latest one inside the span;
+- every train step heartbeats (extends the SQS lease, raises Preempted on
+  spot kill).
+
+Also registers ``distributed-eval`` (perplexity over a data shard) — the
+third "Something", mirroring the paper's three public implementations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced
+from repro.core.worker import NotReady, WorkerContext, register_payload
+from repro.models import Model, ModelRuntime
+from repro.train.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import AdamWConfig, Schedule, init_opt_state
+from repro.train.steps import TrainStepConfig, make_train_step
+
+
+def build_model(job: Dict) -> Model:
+    cfg = get_arch(job["arch"])
+    overrides = job.get("arch_overrides")
+    if overrides == "reduced":
+        cfg = reduced(cfg)
+    elif isinstance(overrides, dict):
+        cfg = dataclasses.replace(cfg, **overrides)
+    rt = ModelRuntime(moe_strategy=job.get("moe_strategy", "dense"))
+    return Model(cfg, rt)
+
+
+def build_train_step(job: Dict, model: Model):
+    opt = AdamWConfig(
+        schedule=Schedule(
+            peak_lr=job.get("lr", 3e-4),
+            warmup_steps=job.get("warmup_steps", 20),
+            total_steps=job.get("total_steps", 1000),
+        ),
+        weight_decay=job.get("weight_decay", 0.1),
+        moments_dtype=job.get("moments_dtype", "f32"),
+    )
+    tcfg = TrainStepConfig(
+        microbatches=job.get("microbatches", 1),
+        accum_dtype=job.get("accum_dtype", "f32"),
+        opt=opt,
+    )
+    return make_train_step(model, tcfg), opt
+
+
+@register_payload("distributed-train")
+def train_payload(job: Dict, ctx: WorkerContext) -> Dict:
+    run = job.get("run", "run0")
+    start, num = int(job["start_step"]), int(job["num_steps"])
+    end = start + num
+    ckpt_every = int(job.get("ckpt_every", max(1, num)))
+
+    model = build_model(job)
+    train_step, opt_cfg = build_train_step(job, model)
+    train_step = jax.jit(train_step, donate_argnums=(0, 1))
+    data = SyntheticLM(
+        model.cfg,
+        DataConfig(
+            seq_len=job.get("seq_len", 64),
+            global_batch=job.get("global_batch", 4),
+            seed=job.get("data_seed", 0),
+        ),
+    )
+
+    # ---- restore or init ---------------------------------------------------
+    have = latest_step(ctx.store, run)
+    if start == 0 and (have is None or have < 0):
+        params = model.init(jax.random.PRNGKey(job.get("init_seed", 0)))
+        opt_state = init_opt_state(params, opt_cfg)
+        state_step = 0
+    else:
+        if have is None or have < start:
+            raise NotReady(
+                f"span [{start},{end}) prerequisite checkpoint missing (latest={have})",
+                retry_in=float(job.get("prereq_retry_s", 10.0)),
+            )
+        resume = min(have, end)
+        like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params, _ = restore_checkpoint(ctx.store, run, resume, like)
+        opt_like = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), like)
+        try:
+            opt_state, _ = restore_checkpoint(ctx.store, f"{run}-opt", resume, opt_like)
+        except Exception:
+            opt_state = init_opt_state(params, opt_cfg)  # opt state lost: cold moments
+        state_step = resume
+        opt_state["step"] = jnp.asarray(state_step, jnp.int32)
+
+    losses = []
+    for step in range(state_step, end):
+        batch = data.batch(step)
+        params, opt_state, metrics = train_step(
+            params, opt_state, batch, jax.random.PRNGKey(step)
+        )
+        losses.append(float(metrics["loss"]))
+        ctx.heartbeat(progress=f"step {step + 1}/{end} loss={losses[-1]:.4f}")
+        done_step = step + 1
+        if done_step % ckpt_every == 0 or done_step == end:
+            save_checkpoint(ctx.store, run, done_step, params, extra_meta={"loss": losses[-1]})
+            save_checkpoint(ctx.store, f"{run}-opt", done_step, opt_state)
+
+    result = {
+        "run": run,
+        "span": [start, end],
+        "steps_run": len(losses),
+        "final_loss": losses[-1] if losses else None,
+    }
+    out = job.get("output_prefix", f"runs/{run}/spans/{start:06d}-{end:06d}")
+    ctx.store.put_json(f"{out}/DONE.json", result)
+    return result
+
+
+@register_payload("distributed-eval")
+def eval_payload(job: Dict, ctx: WorkerContext) -> Dict:
+    """Perplexity over a deterministic shard of the synthetic stream."""
+    run = job.get("run", "run0")
+    model = build_model(job)
+    data = SyntheticLM(
+        model.cfg,
+        DataConfig(
+            seq_len=job.get("seq_len", 64),
+            global_batch=job.get("global_batch", 4),
+            seed=job.get("data_seed", 1234),
+        ),
+    )
+    step_ck = latest_step(ctx.store, run)
+    if step_ck is None:
+        raise RuntimeError(f"no checkpoint for run {run!r}")
+    like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params, _ = restore_checkpoint(ctx.store, run, step_ck, like)
+
+    loss_fn = jax.jit(lambda p, b: model.loss(p, b)[0])
+    shard_idx = int(job.get("shard", 0))
+    n_batches = int(job.get("n_batches", 4))
+    losses = []
+    for i in range(n_batches):
+        batch = data.batch(shard_idx * n_batches + i)
+        losses.append(float(loss_fn(params, batch)))
+        ctx.heartbeat(progress=f"eval batch {i + 1}/{n_batches}")
+    mean = sum(losses) / len(losses)
+    result = {"run": run, "shard": shard_idx, "ckpt_step": step_ck, "loss": mean,
+              "ppl": float(jnp.exp(jnp.asarray(mean)))}
+    out = job.get("output_prefix", f"runs/{run}/eval/shard{shard_idx}")
+    ctx.store.put_json(f"{out}/METRICS.json", result)
+    return result

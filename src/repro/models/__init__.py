@@ -1,0 +1,2 @@
+"""Model substrate: layers, attention variants, MoE, SSM, unified builder."""
+from repro.models.transformer import Model, ModelRuntime  # noqa: F401

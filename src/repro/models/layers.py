@@ -1,0 +1,254 @@
+"""Model primitives: norms, activations, RoPE, dense/gated MLPs, attention.
+
+Pure-functional JAX; parameters are plain dict pytrees.  Activation
+shardings are logical (`repro.sharding.logical.shard`) so the same code
+serves smoke tests (1 CPU device) and the production mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import shard
+
+Params = Dict[str, jax.Array]
+
+
+# ------------------------------------------------------------------- init
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0) -> jax.Array:
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def norm_init(d: int, kind: str, dtype) -> Params:
+    p = {"w": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["w"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm_gated(p: Params, x: jax.Array, gate: jax.Array, eps: float) -> jax.Array:
+    """Mamba2's gated RMSNorm: norm(x * silu(gate)) * w."""
+    xf = (x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * p["w"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+GATED = {"silu", "gelu_gated"}
+
+
+def mlp_init(key, d: int, f: int, activation: str, dtype, depth_scale: float) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d, f, dtype)}
+    if activation in GATED:
+        p["wg"] = dense_init(ks[1], d, f, dtype)
+    p["wo"] = dense_init(ks[2], f, d, dtype, scale=depth_scale)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, activation: str) -> jax.Array:
+    # "act_embed" is None in training (no-op) and 'data' at decode: the
+    # contraction dim of the FFN matmuls is then sharded, so FSDP weight
+    # shards are consumed in place (partial matmul + psum) instead of
+    # being all-gathered per token step
+    x = shard(x, "act_batch", "seq", "act_embed")
+    h = x @ p["wi"]
+    h = shard(h, "batch", "seq", "ff")
+    if activation == "silu":
+        h = jax.nn.silu(h) * (x @ p["wg"])
+    elif activation == "gelu_gated":
+        h = jax.nn.gelu(h) * (x @ p["wg"])
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation == "relu2":  # nemotron squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    out = h @ p["wo"]
+    # TP boundary: in Megatron-SP mode ("residual_seq" -> 'model') the
+    # psum here lowers as reduce-scatter over the sequence dim instead of
+    # a full all-reduce (half the bytes); default is unconstrained
+    return shard(out, "batch", "residual_seq", "embed")
+
+
+# ------------------------------------------------------------------- attention
+def attn_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype,
+    depth_scale: float,
+    qkv_bias: bool = False,
+) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype, scale=depth_scale),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def qkv_project(
+    p: Params,
+    x: jax.Array,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    # decode: contraction dim sharded ('act_embed') -> FSDP weight shards
+    # consumed in place instead of gathered (no-op in training)
+    x = shard(x, "act_batch", "seq", "act_embed")
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv_heads, head_dim)
+    v = v.reshape(b, s, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,Hkv,hd) -> (B,S,H,hd) by repeating groups (GQA)."""
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    reps = n_heads // n_kv
+    return jnp.repeat(k, reps, axis=2)
+
+
+def gqa_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, Hkv, hd) — NOT repeated
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,  # (B, Sq)
+    kv_positions: jax.Array,  # (B, Skv)
+    sliding_window: int = 0,
+    kv_mask: Optional[jax.Array] = None,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Grouped-query attention without materializing repeated KV heads.
+
+    Used on the decode path, where repeating an H/Hkv-grouped 32k-token
+    cache would multiply HBM traffic and footprint by the group size.
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, hkv, g, hd)
+    logits = jnp.einsum(
+        "bqkgd,btkd->bkgqt", qg, k, preferred_element_type=jnp.float32
+    ) * scale  # (b, hkv, g, sq, t)
+    # follow the CACHE's batch sharding: at decode the residual stream may
+    # be batch-replicated (d-sharded), but attention state must stay
+    # batch-sharded with the cache or GSPMD gathers cache shards
+    logits = shard(logits, "cache_batch", "kv_heads", None, None, "kv_seq")
+    if logit_softcap > 0:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    qp = q_positions[:, None, None, :, None]
+    kp = kv_positions[:, None, None, None, :]
+    mask = kp <= qp
+    if sliding_window > 0:
+        mask = jnp.logical_and(mask, kp > qp - sliding_window)
+    if kv_mask is not None:
+        mask = jnp.logical_and(mask, kv_mask[:, None, None, None, :])
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", probs, v)
+    out = out.reshape(b, sq, h, hd)
+    return shard(out, "cache_batch", "seq", "heads", "head_dim")
+
+
+def attention_scores(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    sliding_window: int = 0,
+    kv_mask: Optional[jax.Array] = None,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Reference attention.  q: (B,Sq,H,hd); k,v: (B,Skv,H,hd).
+
+    Computed in fp32 accumulations; positions allow decode (Sq=1 with a
+    long cache) and sliding windows.  ``kv_mask`` masks invalid cache slots.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    logits = shard(logits, "batch", "heads", None, "kv_seq")
+    if logit_softcap > 0:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    if q_positions is None:
+        q_positions = jnp.arange(sq)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)[None, :]
+    qp = q_positions[:, None, :, None]  # (b,1,sq,1)
+    kp = kv_positions[:, None, None, :]  # (b,1,1,skv)
+    mask = jnp.ones((), jnp.bool_)
+    if causal:
+        mask = kp <= qp
+    if sliding_window > 0:
+        mask = jnp.logical_and(mask, kp > qp - sliding_window)
+    if kv_mask is not None:
+        mask = jnp.logical_and(mask, kv_mask[:, None, None, :])
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return shard(out, "batch", "seq", "heads", "head_dim")

@@ -1,0 +1,168 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a per-token latent ``c_kv`` of rank ``kv_lora_rank``
+plus a single shared RoPE key of ``rope_head_dim``; queries go through
+their own low-rank path.  The decode cache stores only
+``(kv_lora_rank + rope_head_dim)`` per token — the paper's 93% KV-cache
+reduction — and attention against the cache is computed in latent space
+by *absorbing* ``k_up`` into the query (so the cache is never expanded to
+per-head keys at decode time).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_norm, apply_rope, dense_init, norm_init
+from repro.sharding.logical import shard
+
+Params = Dict[str, jax.Array]
+
+
+def mla_init(key, cfg: ArchConfig, dtype, depth_scale: float) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.nope_head_dim
+    qr = cfg.rope_head_dim
+    v = cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "q_down": dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": norm_init(cfg.q_lora_rank, cfg.norm, dtype),
+        "q_up": dense_init(ks[1], cfg.q_lora_rank, h * (qk + qr), dtype),
+        "kv_down": dense_init(ks[2], d, cfg.kv_lora_rank + qr, dtype),
+        "kv_norm": norm_init(cfg.kv_lora_rank, cfg.norm, dtype),
+        "k_up": dense_init(ks[3], cfg.kv_lora_rank, h * qk, dtype),
+        "v_up": dense_init(ks[4], cfg.kv_lora_rank, h * v, dtype),
+        "wo": dense_init(ks[5], h * v, d, dtype, scale=depth_scale),
+    }
+
+
+def _project_q(p: Params, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
+    b, s, _ = x.shape
+    h, qk, qr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    q = apply_norm(p["q_norm"], x @ p["q_down"], cfg.norm, cfg.norm_eps) @ p["q_up"]
+    q = q.reshape(b, s, h, qk + qr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p: Params, x: jax.Array, cfg: ArchConfig, positions: jax.Array):
+    """Returns (c_kv (b,s,r), k_rope (b,s,qr)) — exactly what decode caches."""
+    kv = x @ p["kv_down"]
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    c_kv = apply_norm(p["kv_norm"], c_kv, cfg.norm, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def apply_mla(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence (train / prefill) MLA with causal masking."""
+    b, s, _ = x.shape
+    h, qk, qr, vd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv, k_rope = _compress_kv(p, x, cfg, positions)
+
+    k_nope = (c_kv @ p["k_up"]).reshape(b, s, h, qk)
+    v = (c_kv @ p["v_up"]).reshape(b, s, h, vd)
+    k_nope = shard(k_nope, "batch", "seq", "heads", "head_dim")
+    v = shard(v, "batch", "seq", "heads", "head_dim")
+
+    scale = 1.0 / math.sqrt(qk + qr)
+    logits = (
+        jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope, preferred_element_type=jnp.float32)
+    ) * scale
+    logits = shard(logits, "batch", "heads", None, "kv_seq")
+    qpos = positions[:, None, :, None]
+    kpos = positions[:, None, None, :]
+    logits = jnp.where(kpos <= qpos, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out.reshape(b, s, h * vd)
+    return shard(out @ p["wo"], "batch", "seq", "embed")
+
+
+def mla_decode_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+    }
+
+
+def apply_mla_decode(
+    p: Params,
+    x: jax.Array,  # (b, 1, d)
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,  # () current position
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step against the compressed cache (absorbed form).
+
+    score(t) = q_nope·(c_kv[t] K_up)  + q_rope·k_rope[t]
+             = (q_nope K_upᵀ)·c_kv[t] + q_rope·k_rope[t]     # absorb k_up
+    out      = softmax·(c_kv V_up)    = (softmax·c_kv) V_up  # absorb v_up
+    """
+    b = x.shape[0]
+    h, qk, qr, vd, r = (
+        cfg.n_heads,
+        cfg.nope_head_dim,
+        cfg.rope_head_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    pos = jnp.asarray(pos, jnp.int32)
+    uniform_pos = pos.ndim == 0
+    pos_v = jnp.broadcast_to(pos, (b,))
+    positions = pos_v[:, None]
+    q_nope, q_rope = _project_q(p, x, cfg, positions)  # (b,1,h,*)
+    c_new, kr_new = _compress_kv(p, x, cfg, positions)  # (b,1,r), (b,1,qr)
+
+    if uniform_pos:  # scalar write partitions cleanly (see transformer.py)
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+        )
+    else:
+        rows = jnp.arange(b)
+        c_kv = cache["c_kv"].at[rows, pos_v].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, pos_v].set(kr_new[:, 0].astype(cache["k_rope"].dtype))
+    c_kv = shard(c_kv, "cache_batch", "kv_seq", None)
+    k_rope = shard(k_rope, "cache_batch", "kv_seq", None)
+
+    # absorb k_up into q: (b,1,h,qk) @ (r, h, qk) -> (b,h,r)
+    k_up = p["k_up"].reshape(r, h, qk)
+    q_lat = jnp.einsum("bqhd,rhd->bhr", q_nope, k_up)  # q=1 squeezed
+
+    scale = 1.0 / math.sqrt(qk + qr)
+    t = c_kv.shape[1]
+    logits = (
+        jnp.einsum("bhr,btr->bht", q_lat, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,btd->bht", q_rope, k_rope, preferred_element_type=jnp.float32)
+    ) * scale
+    mask = jnp.arange(t)[None, None, :] <= pos_v[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+
+    # absorbed value path: (b,h,t)·(b,t,r) -> (b,h,r), then V_up
+    ctx = jnp.einsum("bht,btr->bhr", probs, c_kv)
+    v_up = p["v_up"].reshape(r, h, vd)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, v_up).reshape(b, 1, h * vd)
+    return shard(out @ p["wo"], "batch", "seq", "embed"), {"c_kv": c_kv, "k_rope": k_rope}

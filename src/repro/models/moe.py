@@ -1,0 +1,256 @@
+"""Mixture-of-Experts layers (mixtral-style top-k, deepseek shared experts).
+
+Two dispatch strategies, selectable per call:
+
+- ``dense``   — every expert computes every token, outputs gated.  Exact;
+                used as the correctness oracle and for tiny smoke configs.
+- ``capacity``— sort-based dropless-ish dispatch with a static per-expert
+                capacity: tokens are argsorted by expert id, scattered into
+                an (E, C, D) buffer (experts shardable over the ``model``
+                axis for expert parallelism), batched expert matmuls, then
+                scatter-add combine.  Tokens overflowing an expert's
+                capacity are dropped (GShard semantics, capacity_factor
+                controls the drop rate).
+
+Router: softmax over expert logits then top-k, gates renormalized over the
+selected experts (mixtral convention).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import GATED, apply_mlp, dense_init, mlp_init
+from repro.sharding.logical import shard
+
+Params = Dict[str, jax.Array]
+
+
+def moe_init(key, cfg: ArchConfig, dtype, depth_scale: float) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept fp32
+        "wi": _experts_init(ks[1], e, d, f, dtype),
+        "wo": _experts_init(ks[2], e, f, d, dtype, scale=depth_scale),
+    }
+    if cfg.activation in GATED:
+        p["wg"] = _experts_init(ks[3], e, d, f, dtype)
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(
+            ks[4], d, cfg.moe_d_ff * cfg.n_shared_experts, cfg.activation, dtype, depth_scale
+        )
+    return p
+
+
+def _experts_init(key, e: int, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    return (jax.random.normal(key, (e, d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def _expert_ffn(p: Params, x: jax.Array, activation: str) -> jax.Array:
+    """x: (E, C, D) -> (E, C, D), batched over experts.
+
+    Sharding strategy matches the rules engine: expert-parallel when the
+    expert count divides the tp axis (deepseek: 160/16), TP-inside-expert
+    otherwise (mixtral: 8 experts on a 16-way axis) — the hidden dim then
+    takes the 'ff' sharding instead, never both (one mesh axis, one dim).
+    """
+    from repro.sharding.logical import rule_divides
+
+    e = x.shape[0]
+    d = x.shape[-1]
+    ep = rule_divides(e, "experts")
+    ff_ax = None if ep else "ff"
+    # decode ("act_embed" active): hidden dim takes the FSDP axis so the
+    # expert matmuls consume weight shards in place; the capacity dim must
+    # then release that axis (one mesh axis, one dim per spec)
+    dec = rule_divides(d, "act_embed")
+    cap_ax = None if dec else "expert_cap"
+    emb_ax = "act_embed" if dec else None
+    h = jnp.einsum("ecd,edf->ecf", x, p["wi"])
+    h = shard(h, "experts", cap_ax, ff_ax)
+    if activation == "silu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", x, p["wg"])
+    elif activation == "gelu_gated":
+        h = jax.nn.gelu(h) * jnp.einsum("ecd,edf->ecf", x, p["wg"])
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(activation)
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    # hidden dim follows "act_embed" (None in training; the FSDP axis at
+    # decode, so wo's data-sharded output dim is produced in place instead
+    # of gathering the weight — §Perf 3.6)
+    return shard(out, "experts", cap_ax, emb_ax)
+
+
+def route(p: Params, x: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Returns (gates (T,k) fp32, expert_ids (T,k) int32) for flat tokens."""
+    logits = x.astype(jnp.float32) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, ids.astype(jnp.int32)
+
+
+def apply_moe_dense(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Oracle path: compute all experts for all tokens."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gates, ids = route(p, xt, cfg.top_k)  # (T,k)
+    e = cfg.n_experts
+    # dense gate matrix (T, E)
+    gmat = jnp.zeros((xt.shape[0], e), jnp.float32)
+    gmat = gmat.at[jnp.arange(xt.shape[0])[:, None], ids].add(gates)
+    # all experts on all tokens: (E, T, D)
+    xe = jnp.broadcast_to(xt[None], (e, xt.shape[0], d))
+    ye = _expert_ffn(p, xe, cfg.activation)  # (E, T, D)
+    y = jnp.einsum("etd,te->td", ye.astype(jnp.float32), gmat).astype(x.dtype)
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, cfg.activation)
+    return y
+
+
+def apply_moe_gather(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Production path: static-capacity, **gather-only** dispatch.
+
+    No scatters anywhere: XLA lowers large scatters into index-broadcast
+    monsters with an extra x D memory factor (measured 18.7 GiB of u32
+    index tensors for deepseek-v2 train_4k, EXPERIMENTS §Perf).  Instead:
+
+      order      = argsort(expert_id)                  (T·k ints)
+      starts[e]  = searchsorted(sorted_ids, e)         (E ints)
+      slot (e,c) -> sorted entry p = starts[e] + c     (pure gather)
+      buf[e,c]   = x[token_of_sorted[p]]  if valid     (row gather)
+      expert FFN on (E, C, D)
+      y[t]       = sum_j gate_j * ye[e_j, c_j]         (row gather back)
+
+    Tokens beyond an expert's capacity are dropped (GShard semantics).
+    """
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.top_k, cfg.n_experts
+    cap = int((t * k / e) * cfg.capacity_factor + 0.999)
+    cap = max(cap, 1)
+
+    xt = x.reshape(t, d)
+    gates, ids = route(p, xt, k)  # (T,k)
+
+    flat_ids = ids.reshape(t * k)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    sorted_tok = flat_tok[order]
+
+    first_occurrence = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    pos_in_expert = jnp.arange(t * k, dtype=jnp.int32) - first_occurrence.astype(jnp.int32)
+
+    # ---- dispatch: slot (e,c) -> source token (gather) ----------------------
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(e, dtype=jnp.int32), side="left")
+    ends = jnp.searchsorted(sorted_ids, jnp.arange(e, dtype=jnp.int32), side="right")
+    slot_p = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]  # (E, C)
+    slot_valid = slot_p < ends[:, None]
+    slot_tok = sorted_tok[jnp.clip(slot_p, 0, t * k - 1)]  # (E, C)
+    buf = jnp.where(slot_valid[..., None], xt[slot_tok], jnp.zeros((), x.dtype))
+    # "act_embed" (None in training, the FSDP axis at decode) puts the
+    # buffer's hidden dim on the FSDP axis so the expert matmuls consume
+    # weight shards in place instead of all-gathering them per token step;
+    # the capacity dim releases the axis when it's taken (§Perf 3.6)
+    from repro.sharding.logical import rule_divides as _rd
+
+    _dec = _rd(d, "act_embed")
+    buf = shard(buf, "experts", None if _dec else "expert_cap",
+                "act_embed" if _dec else None)
+
+    ye = _expert_ffn(p, buf, cfg.activation)  # (E, C, D)
+
+    # ---- combine: entry (t,j) -> expert output (gather back) ------------------
+    inv = jnp.argsort(order)  # original entry -> sorted position
+    entry_pos = pos_in_expert[inv].reshape(t, k)  # (T, k) slot within expert
+    entry_e = ids  # (T, k)
+    kept = entry_pos < cap
+    y_gathered = ye[entry_e, jnp.clip(entry_pos, 0, cap - 1)]  # (T, k, D)
+    w = jnp.where(kept, gates, 0.0).astype(jnp.float32)
+    y = jnp.einsum("tkd,tk->td", y_gathered.astype(jnp.float32), w)
+    y = y.astype(x.dtype).reshape(b, s, d)
+    y = shard(y, "batch", "seq", "embed")
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, cfg.activation)
+    return y
+
+
+def apply_moe_capacity(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Scatter-based capacity dispatch (kept as the §Perf 'before'; the
+    gather-only path above is the production default)."""
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.top_k, cfg.n_experts
+    cap = int((t * k / e) * cfg.capacity_factor + 0.999)
+    cap = max(cap, 1)
+
+    xt = x.reshape(t, d)
+    gates, ids = route(p, xt, k)  # (T,k)
+
+    flat_ids = ids.reshape(t * k)  # expert id per (token, slot)
+    flat_gates = gates.reshape(t * k)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    sorted_tok = flat_tok[order]
+    sorted_gates = flat_gates[order]
+
+    # position of each entry within its expert's run
+    first_occurrence = jnp.searchsorted(sorted_ids, sorted_ids, side="left")
+    pos_in_expert = jnp.arange(t * k, dtype=jnp.int32) - first_occurrence.astype(jnp.int32)
+    keep = pos_in_expert < cap
+
+    # scatter tokens into the (E, C, D) buffer; dropped entries go to a
+    # scratch row that is never read back
+    safe_e = jnp.where(keep, sorted_ids, e - 1)
+    safe_c = jnp.where(keep, pos_in_expert, cap - 1)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[safe_e, safe_c].set(
+        jnp.where(keep[:, None], xt[sorted_tok], jnp.zeros((1, d), x.dtype)),
+        mode="drop",
+    )
+    buf = shard(buf, "experts", "expert_cap", "embed")
+
+    ye = _expert_ffn(p, buf, cfg.activation)  # (E, C, D)
+
+    # gather back and combine with gates
+    y_entries = ye[safe_e, safe_c]  # (T*k, D)
+    weights = jnp.where(keep, sorted_gates, 0.0).astype(jnp.float32)
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[sorted_tok].add(y_entries.astype(jnp.float32) * weights[:, None])
+    y = y.astype(x.dtype).reshape(b, s, d)
+    y = shard(y, "batch", "seq", "embed")
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, cfg.activation)
+    return y
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ArchConfig, strategy: str = "capacity") -> jax.Array:
+    if strategy == "dense":
+        return apply_moe_dense(p, x, cfg)
+    if strategy in ("capacity", "shardmap"):
+        if strategy == "shardmap":
+            from repro.models.moe_shardmap import apply_moe_shardmap, shardmap_applicable
+
+            if shardmap_applicable(cfg, x.shape):
+                return apply_moe_shardmap(p, x, cfg)
+        return apply_moe_gather(p, x, cfg)  # production GSPMD path / fallback
+    if strategy == "capacity_scatter":  # §Perf baseline for comparison
+        return apply_moe_capacity(p, x, cfg)
+    raise ValueError(f"unknown moe strategy {strategy!r}")

@@ -1,0 +1,258 @@
+"""Mamba2 blocks via the SSD (state-space duality) chunked algorithm.
+
+Training/prefill uses the chunked SSD form ("Transformers are SSMs",
+arXiv:2405.21060, Listing 1): within-chunk quadratic attention-like term
+plus an inter-chunk linear recurrence over per-chunk states.  Decode uses
+the O(1) recurrent update.  The within/inter-chunk einsums are the
+perf-critical TPU hot-spot — `repro.kernels.ssd` provides the Pallas
+kernel; this module is the pure-jnp path (also the kernel's oracle).
+
+TP note: the input projection is stored as *separate* matrices (w_z, w_x,
+w_B, w_C, w_dt) rather than one fused matrix.  A fused projection whose
+output is `jnp.split` at boundaries that don't align with the ``model``
+axis shards would force GSPMD realignment collectives; separate matrices
+let w_z/w_x shard cleanly on their output dim while the small B/C/dt
+projections stay replicated.  Since the depthwise conv is per-channel,
+convolving x, B, C separately is exactly equivalent to mamba2's fused
+conv over their concatenation.
+
+Layout conventions (g = 1 state group, as in mamba2-1.3b):
+    x  : (b, l, h, p)    inner activations, h heads of size p
+    dt : (b, l, h)       per-head timestep (after softplus)
+    A  : (h,)            negative decay
+    B,C: (b, l, n)       state in/out projections, n = d_state
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, rmsnorm_gated
+from repro.sharding.logical import shard
+
+Params = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------- SSD core
+def segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} a[..., k].
+
+    Returns -inf above the diagonal (masked decay matrix in log space).
+    """
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    if l % chunk:
+        raise ValueError(f"seq len {l} not divisible by chunk {chunk}")
+    c = l // chunk
+
+    dA = dt * A  # (b, l, h) in log space, negative
+    xr = x.reshape(b, c, chunk, h, p)
+    dtr = dt.reshape(b, c, chunk, h)
+    dAr = dA.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,q)
+    Br = B.reshape(b, c, chunk, n)
+    Cr = C.reshape(b, c, chunk, n)
+
+    A_cumsum = jnp.cumsum(dAr, axis=-1)  # (b,h,c,q)
+
+    # 1. within-chunk (quadratic, "diagonal" term)
+    L = jnp.exp(segsum(dAr))  # (b,h,c,q,q)
+    Y_diag = jnp.einsum(
+        "bcqn,bckn,bhcqk,bckh,bckhp->bcqhp", Cr, Br, L, dtr, xr,
+        preferred_element_type=jnp.float32,
+    )
+
+    # 2. per-chunk states (low-rank term): decay from position to chunk end
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)  # (b,h,c,q)
+    states = jnp.einsum(
+        "bckn,bhck,bckh,bckhp->bchpn", Br, decay_states, dtr, xr,
+        preferred_element_type=jnp.float32,
+    )
+
+    # 3. inter-chunk recurrence over chunk states
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    chunk_decay = jnp.exp(A_cumsum[..., -1])  # (b,h,c) total decay per chunk
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # st (b,h,p,n), dec (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1))  # lead dim c
+    final, prev_states = jax.lax.scan(scan_fn, initial_state.astype(jnp.float32), xs)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+
+    # 4. state -> output within each chunk
+    state_decay_out = jnp.exp(A_cumsum)  # (b,h,c,q)
+    Y_off = jnp.einsum(
+        "bcqn,bchpn,bhcq->bcqhp", Cr, prev_states, state_decay_out,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (Y_diag + Y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y, final
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (b,h,p,n) fp32
+    x: jax.Array,  # (b,h,p)
+    dt: jax.Array,  # (b,h)
+    A: jax.Array,  # (h,)
+    B: jax.Array,  # (b,n)
+    C: jax.Array,  # (b,n)
+) -> Tuple[jax.Array, jax.Array]:
+    """O(1) recurrent update: h' = exp(dt*A) h + dt * x ⊗ B ; y = C · h'."""
+    decay = jnp.exp(dt * A)  # (b,h)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x.astype(jnp.float32), B.astype(jnp.float32))
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------------- mamba2 block
+def mamba2_init(key, cfg: ArchConfig, dtype, depth_scale: float) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": dense_init(ks[0], d, di, dtype),
+        "w_x": dense_init(ks[1], d, di, dtype),
+        "w_B": dense_init(ks[2], d, n, dtype),
+        "w_C": dense_init(ks[3], d, n, dtype),
+        "w_dt": dense_init(ks[4], d, h, dtype),
+        "conv_x": {"w": _conv_init(ks[5], k, di, dtype), "b": jnp.zeros((di,), dtype)},
+        "conv_B": {"w": _conv_init(ks[6], k, n, dtype), "b": jnp.zeros((n,), dtype)},
+        "conv_C": {"w": _conv_init(ks[7], k, n, dtype), "b": jnp.zeros((n,), dtype)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": {"w": jnp.ones((di,), dtype)},
+        "out_proj": dense_init(ks[8], di, d, dtype, scale=depth_scale),
+    }
+
+
+def _conv_init(key, k: int, c: int, dtype):
+    return (jax.random.normal(key, (k, c), jnp.float32) * 0.1).astype(dtype)
+
+
+def causal_conv(xc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d over (b, l, c) with kernel (k, c), then silu."""
+    k = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (k - 1, 0), (0, 0)))
+    # unrolled taps (k is small): avoids conv_general dilated lowering surprises
+    acc = jnp.zeros(xc.shape, jnp.float32)
+    for i in range(k):
+        acc = acc + pad[:, i : i + xc.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(acc + b.astype(jnp.float32)).astype(xc.dtype)
+
+
+def _project(p: Params, x: jax.Array):
+    """x (b,l,d) -> z (b,l,di), xi/B/C pre-conv, dt logits (b,l,h)."""
+    z = shard(x @ p["w_z"], "batch", "seq", "ssm_inner")
+    xi = shard(x @ p["w_x"], "batch", "seq", "ssm_inner")
+    B = x @ p["w_B"]
+    C = x @ p["w_C"]
+    dt = x @ p["w_dt"]
+    return z, xi, B, C, dt
+
+
+def apply_mamba2(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Full-sequence mamba2 block (train / prefill)."""
+    b, l, d = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+
+    z, xi, B, C, dt = _project(p, x)
+    xi = causal_conv(xi, p["conv_x"]["w"], p["conv_x"]["b"])
+    B = causal_conv(B, p["conv_B"]["w"], p["conv_B"]["b"])
+    C = causal_conv(C, p["conv_C"]["w"], p["conv_C"]["b"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,l,h)
+    A = -jnp.exp(p["A_log"])  # (h,)
+    xh = xi.reshape(b, l, h, hp)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y, _ = kops.ssd(xh, dt, A, B, C, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, B, C, chunk=cfg.ssm_chunk)
+    y = y + (p["D"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, l, di)
+    y = rmsnorm_gated(p["norm_w"], y, z, cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return shard(out, "batch", "residual_seq", "embed")
+
+
+def mamba2_decode_state(cfg: ArchConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    k = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, k - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, n), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, n), dtype),
+        "ssm": jnp.zeros((batch, h, hp, n), jnp.float32),
+    }
+
+
+def _conv_step(state_win: jax.Array, xt: jax.Array, w: jax.Array, b: jax.Array):
+    """Rolling depthwise conv update.  state_win (b,k-1,c), xt (b,c)."""
+    window = jnp.concatenate([state_win, xt[:, None, :]], axis=1)  # (b,k,c)
+    acc = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    out = jax.nn.silu(acc + b.astype(jnp.float32)).astype(xt.dtype)
+    return out, window[:, 1:, :]
+
+
+def apply_mamba2_decode(
+    p: Params,
+    x: jax.Array,  # (b, 1, d)
+    state: Dict[str, jax.Array],
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, _, d = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+
+    z, xi, B, C, dt = _project(p, x)
+    z, xi, B, C, dt = z[:, 0], xi[:, 0], B[:, 0], C[:, 0], dt[:, 0]
+
+    xi, new_cx = _conv_step(state["conv_x"], xi, p["conv_x"]["w"], p["conv_x"]["b"])
+    B, new_cb = _conv_step(state["conv_B"], B, p["conv_B"]["w"], p["conv_B"]["b"])
+    C, new_cc = _conv_step(state["conv_C"], C, p["conv_C"]["w"], p["conv_C"]["b"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, h, hp)
+
+    y, new_ssm = ssd_decode_step(state["ssm"], xh, dt, A, B, C)
+    y = y + (p["D"][None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, di)
+    y = rmsnorm_gated(p["norm_w"], y, z, cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv_x": new_cx, "conv_B": new_cb, "conv_C": new_cc, "ssm": new_ssm}

@@ -1,0 +1,263 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device  / peak_FLOP/s          (197e12, bf16)
+    memory term     = HLO_bytes_per_device  / HBM_bw               (819e9 B/s)
+    collective term = collective_bytes_per_device / ICI_bw         (50e9 B/s/link)
+
+Methodology (verified by probe, see DESIGN.md §4): XLA's
+``compiled.cost_analysis()`` reports per-device numbers for the ENTRY
+computation only — ops inside ``scan``/``while`` bodies are invisible.
+Production cells lower layer stacks as ``scan`` (for compile time), so
+roofline numbers come from **unrolled differencing probes**: the same
+step lowered at two reduced depths (L1 < L2) with ``unroll_layers=True``,
+``microbatches=1`` and ``attn_impl='direct'`` (no inner scans anywhere):
+
+    per_layer = (cost(L2) - cost(L1)) / (L2 - L1)
+    total(L)  = cost(L1) + per_layer * (L - L1)
+
+The differencing cancels the fixed embed/lm-head/loss/optimizer terms
+into ``cost(L1)`` exactly.  Collective bytes are parsed from the probes'
+``compiled.as_text()`` with ring-algorithm per-device byte formulas and
+the same extrapolation.
+
+Known accounting conventions (stated in EXPERIMENTS.md):
+- attention FLOPs count the full S x S rectangle (both the direct and the
+  chunked jnp paths compute it); MODEL_FLOPS uses the causal-optimal
+  count, so the useful-compute ratio surfaces the 2x attention headroom
+  that the Pallas flash kernel's tile-skipping recovers on TPU;
+- bytes come from the mb=1 probe: microbatched production steps re-read
+  parameters once per microbatch; the memory term is therefore a lower
+  bound for mb > 1 (discussed in §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+TPU_V5E = {
+    "peak_flops": 197e12,
+    "hbm_bytes": 16 * 1024**3,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    def __sub__(self, other: "CollectiveStats") -> "CollectiveStats":
+        ops = set(self.bytes_by_op) | set(other.bytes_by_op)
+        return CollectiveStats(
+            {o: self.bytes_by_op.get(o, 0.0) - other.bytes_by_op.get(o, 0.0) for o in ops},
+            {o: self.count_by_op.get(o, 0) - other.count_by_op.get(o, 0) for o in ops},
+        )
+
+    def scaled_add(self, other: "CollectiveStats", k: float) -> "CollectiveStats":
+        ops = set(self.bytes_by_op) | set(other.bytes_by_op)
+        return CollectiveStats(
+            {o: self.bytes_by_op.get(o, 0.0) + k * other.bytes_by_op.get(o, 0.0) for o in ops},
+            {o: self.count_by_op.get(o, 0) + int(k) * other.count_by_op.get(o, 0) for o in ops},
+        )
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Per-device bytes moved over ICI, ring-algorithm convention:
+
+        all-gather:         (g-1)/g * result_bytes
+        reduce-scatter:     (g-1)   * result_bytes      (input = g * result)
+        all-reduce:         2 * (g-1)/g * result_bytes
+        all-to-all:         (g-1)/g * result_bytes
+        collective-permute: result_bytes
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        rb = _shape_bytes(m.group("result"))
+        g = max(_group_size(line, n_devices), 1)
+        if op == "all-gather":
+            b = rb * (g - 1) / g
+        elif op == "reduce-scatter":
+            b = rb * (g - 1)
+        elif op == "all-reduce":
+            b = 2.0 * rb * (g - 1) / g
+        elif op == "all-to-all":
+            b = rb * (g - 1) / g
+        else:  # collective-permute
+            b = float(rb)
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + b
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+# ---------------------------------------------------------------- roofline core
+@dataclass
+class ProbeCost:
+    flops: float
+    bytes: float  # HBM-model bytes with the flash correction (bytes_flash)
+    collectives: CollectiveStats
+    bytes_jnp: float = 0.0  # as-lowered (quadratic attention in HBM)
+    quadratic_bytes: float = 0.0
+
+
+@dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    n_layers: int
+    probe_layers: Tuple[int, int]
+    flops: float  # per device, extrapolated
+    bytes: float  # HBM model, flash-corrected
+    collective: CollectiveStats
+    model_flops_global: float
+    n_devices: int
+    bytes_jnp: float = 0.0
+    hw: Dict = field(default_factory=lambda: dict(TPU_V5E))
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.hw["peak_flops"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes / self.hw["hbm_bw"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective.total_bytes / self.hw["ici_bw"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def model_flops_per_device(self) -> float:
+        return self.model_flops_global / self.n_devices
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat/masking/redundancy waste)."""
+        return self.model_flops_per_device / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU at the modeled bound: useful compute time over
+        the dominating term (perfect overlap assumption)."""
+        ideal = self.model_flops_per_device / self.hw["peak_flops"]
+        return ideal / max(self.bound_s, 1e-30)
+
+    def to_json(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "n_layers": self.n_layers,
+            "probe_layers": list(self.probe_layers),
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes,
+            "bytes_per_device_jnp": self.bytes_jnp,
+            "collective_bytes_per_device": self.collective.total_bytes,
+            "collective_by_op": self.collective.bytes_by_op,
+            "collective_counts": self.collective.count_by_op,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_global": self.model_flops_global,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "n_devices": self.n_devices,
+        }
+
+
+def extrapolate(
+    c1: ProbeCost, c2: ProbeCost, l1: int, l2: int, n_layers: int
+) -> Tuple[float, float, float, CollectiveStats]:
+    span = max(l2 - l1, 1)
+    df = (c2.flops - c1.flops) / span
+    db = (c2.bytes - c1.bytes) / span
+    dbj = (c2.bytes_jnp - c1.bytes_jnp) / span
+    dc = c2.collectives - c1.collectives
+    dc = CollectiveStats(
+        {o: v / span for o, v in dc.bytes_by_op.items()},
+        {o: v // span for o, v in dc.count_by_op.items()},
+    )
+    rem = n_layers - l1
+    flops = c1.flops + df * rem
+    bytes_ = c1.bytes + db * rem
+    bytes_jnp = c1.bytes_jnp + dbj * rem
+    coll = c1.collectives.scaled_add(dc, rem)
+    return flops, bytes_, bytes_jnp, coll
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Global MODEL_FLOPS per step: 6·N_active·tokens for training,
+    2·N_active·batch (+attention term) per decode step."""
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return cfg.flops_per_token(shape.seq_len, decode=False) * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        # forward only = 1/3 of the 6N convention
+        return cfg.flops_per_token(shape.seq_len, decode=False) * tokens / 3.0
+    return cfg.flops_per_token(shape.seq_len, decode=True) * shape.global_batch

@@ -1,0 +1,137 @@
+"""Buffer-centric HBM-traffic model from post-optimization HLO.
+
+XLA's ``cost_analysis()['bytes accessed']`` sums *pre-fusion* op bytes —
+a wild overestimate of HBM traffic (fused temporaries never leave
+VMEM/registers).  Instead we parse the compiled module's ENTRY
+computation, where every def line is a buffer that actually
+materializes, and charge:
+
+    traffic(buffer) = bytes x (1 write + n_uses reads)
+
+(parameters get reads only; constants are skipped; fusion internals are
+invisible, which is the point).  This matches how roofline tools count
+DRAM traffic for an optimized graph.
+
+Additionally we isolate **quadratic attention buffers** (trailing dims
+S_q x S_kv, both large): the pure-jnp attention path materializes the
+score/prob matrices in HBM, the Pallas flash kernel keeps them in VMEM
+tiles.  Both figures are reported:
+
+    bytes_jnp   — as lowered (the dry-run artifact)
+    bytes_flash — bytes_jnp - quadratic-buffer traffic (the TPU hot path)
+
+Known bias (documented in EXPERIMENTS.md): fusion decisions come from the
+CPU XLA pipeline; TPU fusion differs in detail but not in buffer-level
+structure.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<id>[\w.\-]+)\s*=\s*(?P<shape>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s*(?P<op>[\w\-]+)\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP_OPS = {
+    "constant", "iota", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "parameter",
+}
+
+
+def _shape_bytes_dims(text: str) -> Tuple[int, Tuple[Tuple[int, ...], ...]]:
+    total = 0
+    dims_list = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d.strip())
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        dims_list.append(shape)
+    return total, tuple(dims_list)
+
+
+def _entry_text(hlo: str) -> str:
+    # ENTRY computation block: from "ENTRY" to its closing brace
+    start = hlo.find("ENTRY ")
+    if start < 0:
+        return hlo
+    end = hlo.find("\n}", start)
+    return hlo[start : end + 2 if end > 0 else len(hlo)]
+
+
+@dataclass
+class HBMTraffic:
+    bytes_jnp: float
+    bytes_flash: float
+    quadratic_bytes: float
+    n_buffers: int
+    has_while: bool
+
+
+def hbm_traffic(hlo: str, *, quad_threshold: int = 1024) -> HBMTraffic:
+    entry = _entry_text(hlo)
+    lines = entry.splitlines()
+
+    defs: Dict[str, Tuple[int, bool]] = {}  # id -> (bytes, is_quadratic)
+    writes: Dict[str, int] = {}
+    op_of: Dict[str, str] = {}
+    has_while = "while(" in entry or " while(" in entry
+
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        bid, shape_txt, op = m.group("id"), m.group("shape"), m.group("op")
+        nbytes, dims_list = _shape_bytes_dims(shape_txt)
+        quad = any(
+            len(s) >= 2 and s[-1] >= quad_threshold and s[-2] >= quad_threshold
+            for s in dims_list
+        )
+        defs[bid] = (nbytes, quad)
+        op_of[bid] = op
+        writes[bid] = 0 if op in ("parameter", "constant", "iota") else 1
+
+    uses: Dict[str, int] = {bid: 0 for bid in defs}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        def_id = m.group("id") if m else None
+        for ref in _REF_RE.findall(ln):
+            if ref in uses and ref != def_id:
+                uses[ref] += 1
+
+    total = 0.0
+    quad_total = 0.0
+    n_buffers = 0
+    for bid, (nbytes, quad) in defs.items():
+        op = op_of[bid]
+        if op in ("constant",):
+            continue
+        if op in ("tuple", "get-tuple-element", "bitcast"):
+            continue  # aliases, no data movement
+        t = nbytes * (writes[bid] + uses[bid])
+        total += t
+        n_buffers += 1
+        if quad and op not in ("parameter",):
+            quad_total += t
+    return HBMTraffic(
+        bytes_jnp=total,
+        bytes_flash=total - quad_total,
+        quadratic_bytes=quad_total,
+        n_buffers=n_buffers,
+        has_while=has_while,
+    )

@@ -1,0 +1,10 @@
+"""Sharding: logical activation axes + parameter-spec rules engine."""
+from repro.sharding.logical import axis_rules, decode_rules, shard, train_rules  # noqa: F401
+from repro.sharding.rules import (  # noqa: F401
+    RuleReport,
+    ShardingPolicy,
+    bytes_per_device,
+    choose_policy,
+    param_shardings,
+    param_specs,
+)

@@ -1,0 +1,133 @@
+"""Logical-axis activation sharding.
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "seq", "heads", "head_dim")``); a rule set maps
+logical names to mesh axes (or ``None`` = replicated).  Outside a rule
+context the annotations are no-ops, so the same model code runs on a
+single CPU device (smoke tests) and on the 512-chip production mesh
+(dry-run) unchanged.
+
+Rule sets are plain dicts; see :data:`TRAIN_RULES` / :data:`DECODE_RULES`
+for the production defaults and `repro.sharding.rules` for parameter
+sharding.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, MeshAxes]]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, MeshAxes]):
+    """Activate logical->mesh axis rules (thread-local)."""
+    prev = _current()
+    _state.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def resolve(logical: Sequence[Optional[str]], rules: Dict[str, MeshAxes]) -> P:
+    return P(*[rules.get(ax) if ax is not None else None for ax in logical])
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint derived from logical axes.
+
+    ``None`` entries mean "no constraint on this dim".  No-op when no rule
+    context is active or when a named dim does not divide its mesh axes.
+    """
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(logical):
+        raise ValueError(f"shard(): rank {x.ndim} vs logical axes {logical}")
+    spec = []
+    for dim, ax in zip(x.shape, logical):
+        mesh_axes = rules.get(ax) if ax is not None else None
+        if mesh_axes is None:
+            spec.append(None)
+            continue
+        axes = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        # replicate rather than fail when the dim is too small / indivisible
+        spec.append(mesh_axes if (size <= dim and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def rule_divides(dim: int, logical: str) -> bool:
+    """Does the active rule for ``logical`` shard a dim of this size?
+
+    Lets model code choose between sharding strategies at trace time
+    (e.g. expert-parallel vs TP-inside-expert in the MoE layer)."""
+    ctx = _current()
+    if ctx is None:
+        return False
+    mesh, rules = ctx
+    mesh_axes = rules.get(logical)
+    if mesh_axes is None:
+        return False
+    axes = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size > 1 and size <= dim and dim % size == 0
+
+
+# ----------------------------------------------------------------- rule sets
+# Production defaults for the (pod, data, model) / (data, model) meshes.
+def train_rules(multi_pod: bool) -> Dict[str, MeshAxes]:
+    dp: MeshAxes = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": dp,
+        "cache_batch": dp,
+        "act_batch": dp,  # batch sharding of FFN-local activations
+        "act_embed": None,  # hidden-dim sharding of FFN inputs (decode)
+        "act_heads": None,  # attention-out contraction sharding (decode)
+        "seq": None,
+        # Megatron-style sequence parallelism: set to 'model' to carry the
+        # residual stream seq-sharded between blocks (TP boundary psums
+        # become reduce-scatter + all-gather pairs, 2x fewer bytes)
+        "residual_seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        # dispatch buffers (E, C, D): capacity dim over the dp axes so the
+        # buffer is data-sharded like the tokens it holds
+        "expert_cap": dp,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "kv_seq": None,
+    }
+
+
+def decode_rules(multi_pod: bool, *, seq_sharded_kv: bool = False) -> Dict[str, MeshAxes]:
+    r = train_rules(multi_pod)
+    if seq_sharded_kv:
+        # context parallelism: KV cache sequence dim over the dp axes
+        # (long_500k: batch=1, so dp axes are free); heads stay on "model".
+        r["kv_seq"] = ("pod", "data") if multi_pod else ("data",)
+    return r

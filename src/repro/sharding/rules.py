@@ -1,0 +1,257 @@
+"""Parameter-sharding rules engine.
+
+Maps every parameter leaf (by its pytree path and rank) to a
+``PartitionSpec`` on the production mesh, with divisibility-checked
+fallbacks: a dim that does not divide its assigned mesh axes is
+replicated and the decision recorded, so e.g. whisper-tiny's 6 heads or
+internvl2's 14 heads degrade gracefully to replicated attention while
+their FFN/vocab still shard (DESIGN.md §3).
+
+Policies:
+- ``tp_axis``  : tensor-parallel mesh axis ("model").
+- ``fsdp_axes``: axes over which parameters/optimizer state are
+  additionally sharded ZeRO-3-style (() = pure TP + DP-replication;
+  ("data",) = FSDP; ("pod","data") for the largest configs).
+- ``ep``       : expert parallelism — expert dim over ``tp_axis`` when it
+  divides; otherwise experts replicate and expert FFNs shard over tp
+  (TP-inside-expert; mixtral's 8 experts on a 16-way axis).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    tp_axis: str = "model"
+    fsdp_axes: Tuple[str, ...] = ()
+    ep: bool = True
+
+    @property
+    def fsdp(self) -> MeshAxes:
+        if not self.fsdp_axes:
+            return None
+        return self.fsdp_axes if len(self.fsdp_axes) > 1 else self.fsdp_axes[0]
+
+
+def axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+@dataclass
+class RuleReport:
+    """Decisions taken (for DESIGN/EXPERIMENTS and tests)."""
+
+    fallbacks: List[str] = field(default_factory=list)
+    ep_layers: bool = False
+
+    def note(self, msg: str) -> None:
+        if msg not in self.fallbacks:
+            self.fallbacks.append(msg)
+
+
+def _maybe(mesh: Mesh, axes: MeshAxes, dim: int, what: str, report: RuleReport) -> MeshAxes:
+    size = axis_size(mesh, axes)
+    if axes is None or size == 1:
+        return None
+    if dim % size == 0 and dim >= size:
+        return axes
+    report.note(f"{what}: dim {dim} !% {axes}({size}) -> replicated")
+    return None
+
+
+# --------------------------------------------------------------- leaf dispatch
+def _leaf_spec(
+    path: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    pol: ShardingPolicy,
+    report: RuleReport,
+) -> P:
+    tp, fsdp = pol.tp_axis, pol.fsdp
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    stacked = any(k in ("layers", "dense_layers", "cross", "encoder") for k in path[:-1])
+    key = f"{'/'.join(path)}"
+
+    def spec(*base) -> P:
+        """Pad-left with None for the stacked layer dim."""
+        pad = len(shape) - len(base)
+        return P(*([None] * pad + list(base)))
+
+    nd = len(shape) - (1 if stacked else 0)
+
+    # ---- embeddings / heads -----------------------------------------------
+    if name == "embed":
+        return P(_maybe(mesh, tp, shape[0], key, report), _maybe(mesh, fsdp, shape[1], key, report))
+    if name == "lm_head":
+        return P(_maybe(mesh, fsdp, shape[0], key, report), _maybe(mesh, tp, shape[1], key, report))
+    if name == "pos":
+        return spec(None, _maybe(mesh, fsdp, shape[-1], key, report))
+
+    # ---- norms / scalars ----------------------------------------------------
+    if parent in ("ln1", "ln2", "ln", "ln_f", "q_norm", "kv_norm", "norm_w") or name in (
+        "A_log",
+        "D",
+        "dt_bias",
+    ):
+        return P(*([None] * len(shape)))
+    if parent in ("conv_x",):
+        if name == "w":
+            return spec(None, _maybe(mesh, tp, shape[-1], key, report))
+        return spec(_maybe(mesh, tp, shape[-1], key, report))
+    if parent in ("conv_B", "conv_C"):
+        return P(*([None] * len(shape)))
+
+    # ---- attention ------------------------------------------------------------
+    if name in ("wq", "wk", "wv"):
+        return spec(
+            _maybe(mesh, fsdp, shape[-2], key, report), _maybe(mesh, tp, shape[-1], key, report)
+        )
+    if name == "wo" and parent != "mlp" and parent != "moe" and parent != "shared":
+        # attention output projection (row-parallel) — mlp/moe handled below
+        return spec(
+            _maybe(mesh, tp, shape[-2], key, report), _maybe(mesh, fsdp, shape[-1], key, report)
+        )
+    if name in ("bq", "bk", "bv"):
+        return spec(_maybe(mesh, tp, shape[-1], key, report))
+
+    # ---- MLA ---------------------------------------------------------------------
+    if name in ("q_down", "kv_down"):
+        return spec(_maybe(mesh, fsdp, shape[-2], key, report), None)
+    if name in ("q_up", "k_up", "v_up"):
+        return spec(None, _maybe(mesh, tp, shape[-1], key, report))
+
+    # ---- MoE ----------------------------------------------------------------------
+    if name == "router":
+        return spec(_maybe(mesh, fsdp, shape[-2], key, report), None)
+    if parent == "moe":  # expert weights live directly under "moe"
+        if name in ("wi", "wg"):  # (E, D, F)
+            e, dd, ff = shape[-3], shape[-2], shape[-1]
+            if pol.ep and e % axis_size(mesh, tp) == 0:
+                report.ep_layers = True
+                return spec(tp, _maybe(mesh, fsdp, dd, key, report), None)
+            report.note(f"{key}: EP off (E={e} !% tp) -> TP-inside-expert")
+            return spec(None, _maybe(mesh, fsdp, dd, key, report), _maybe(mesh, tp, ff, key, report))
+        if name == "wo":  # (E, F, D)
+            e, ff, dd = shape[-3], shape[-2], shape[-1]
+            if pol.ep and e % axis_size(mesh, tp) == 0:
+                return spec(tp, None, _maybe(mesh, fsdp, dd, key, report))
+            return spec(None, _maybe(mesh, tp, ff, key, report), _maybe(mesh, fsdp, dd, key, report))
+
+    # ---- dense MLP (also moe "shared" expert, zamba "shared" mlp) ------------------
+    if name in ("wi", "wg"):
+        return spec(
+            _maybe(mesh, fsdp, shape[-2], key, report), _maybe(mesh, tp, shape[-1], key, report)
+        )
+    if name == "wo":
+        return spec(
+            _maybe(mesh, tp, shape[-2], key, report), _maybe(mesh, fsdp, shape[-1], key, report)
+        )
+
+    # ---- SSM -----------------------------------------------------------------------
+    if name in ("w_z", "w_x"):
+        return spec(
+            _maybe(mesh, fsdp, shape[-2], key, report), _maybe(mesh, tp, shape[-1], key, report)
+        )
+    if name in ("w_B", "w_C", "w_dt"):
+        return spec(_maybe(mesh, fsdp, shape[-2], key, report), None)
+    if name == "out_proj":
+        return spec(
+            _maybe(mesh, tp, shape[-2], key, report), _maybe(mesh, fsdp, shape[-1], key, report)
+        )
+
+    # ---- zamba2 shared-block extras ---------------------------------------------------
+    if name in ("lora_a",):  # (n_inv, 2D, r)
+        return P(None, _maybe(mesh, fsdp, shape[1], key, report), None)
+    if name in ("lora_b",):  # (n_inv, r, HHD)
+        return P(None, None, _maybe(mesh, tp, shape[2], key, report))
+    if name == "down":  # (2D, D)
+        return P(_maybe(mesh, fsdp, shape[0], key, report), _maybe(mesh, tp, shape[1], key, report))
+
+    report.note(f"{key}: no rule -> replicated")
+    return P(*([None] * len(shape)))
+
+
+# ------------------------------------------------------------------ public API
+def param_specs(
+    params_shape: Any, mesh: Mesh, policy: ShardingPolicy
+) -> Tuple[Any, RuleReport]:
+    """params_shape: pytree of ShapeDtypeStruct/arrays -> pytree of PartitionSpec."""
+    report = RuleReport()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for kp, leaf in flat:
+        path = tuple(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in kp
+        )
+        specs.append(_leaf_spec(path, tuple(leaf.shape), mesh, policy, report))
+    return jax.tree_util.tree_unflatten(treedef, specs), report
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, policy: ShardingPolicy):
+    specs, report = param_specs(params_shape, mesh, policy)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs), report
+
+
+def bytes_per_device(params_shape: Any, specs: Any, mesh: Mesh) -> int:
+    """Parameter bytes on one device under the given specs."""
+    total = 0
+    leaves = jax.tree.leaves(params_shape)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        n = 1
+        padded = tuple(spec) + (None,) * (len(leaf.shape) - len(spec))
+        for d, ax in zip(leaf.shape, padded):
+            shards = axis_size(mesh, ax)
+            n *= -(-d // shards)
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def choose_policy(
+    params_shape: Any,
+    mesh: Mesh,
+    *,
+    hbm_budget_bytes: int = 8 * 1024**3,
+    multi_pod: bool = False,
+    state_multiplier: float = 1.0,
+) -> ShardingPolicy:
+    """Pick FSDP axes so parameters + optimizer state leave room for
+    activations.  ``state_multiplier`` scales the param bytes to the full
+    training state (e.g. bf16 params + fp32 master + moments + grad
+    accumulator ~ 5x); the optimizer state inherits the param specs, so
+    the same escalation logic covers it.
+
+    Pure TP first; escalate to FSDP over "data" (and "pod") when the
+    per-device state bytes exceed ~half the HBM budget.
+    """
+    candidates = [
+        ShardingPolicy(fsdp_axes=()),
+        ShardingPolicy(fsdp_axes=("data",)),
+    ]
+    if multi_pod:
+        candidates.append(ShardingPolicy(fsdp_axes=("pod", "data")))
+    for pol in candidates:
+        specs, _ = param_specs(params_shape, mesh, pol)
+        state = bytes_per_device(params_shape, specs, mesh) * state_multiplier
+        if state <= hbm_budget_bytes // 2:
+            return pol
+    return candidates[-1]

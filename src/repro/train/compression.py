@@ -1,0 +1,71 @@
+"""Gradient compression utilities.
+
+Microbatch gradient accumulation in int8 with **stochastic rounding**
+(unbiased: E[q(x)] = x), used by the train step's accumulation loop, plus
+a bf16-reduction option for the cross-replica gradient sum.  On a real
+multi-pod fabric the same quantize/dequantize pair wraps the
+``psum_scatter`` in the shard_map trainer — the compression math and its
+error bounds are what the tests pin down.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+QBLOCK = 256
+
+
+def stochastic_round_int8(x: jax.Array, key: jax.Array) -> Dict[str, jax.Array]:
+    """Blockwise (last-dim) int8 with stochastic rounding."""
+    x = x.astype(jnp.float32)
+    shape = x.shape if x.ndim else (1,)
+    d = shape[-1]
+    nb = max(1, -(-d // QBLOCK))
+    pad = nb * QBLOCK - d
+    xp = jnp.pad(x.reshape(shape), [(0, 0)] * (len(shape) - 1) + [(0, pad)])
+    blocks = xp.reshape(shape[:-1] + (nb, QBLOCK))
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1) / 127.0, 1e-20)
+    y = blocks / scale[..., None]
+    lo = jnp.floor(y)
+    frac = y - lo
+    u = jax.random.uniform(key, y.shape)
+    q = lo + (u < frac).astype(jnp.float32)
+    q = jnp.clip(q, -127, 127)
+    q = q.reshape(shape[:-1] + (nb * QBLOCK,))[..., :d].astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale}
+
+
+def dequant_int8(qd: Dict[str, jax.Array], shape) -> jax.Array:
+    q, scale = qd["q"], qd["scale"]
+    s = q.shape if q.ndim else (1,)
+    d = s[-1]
+    nb = scale.shape[-1]
+    pad = nb * QBLOCK - d
+    qp = jnp.pad(q.reshape(s).astype(jnp.float32), [(0, 0)] * (len(s) - 1) + [(0, pad)])
+    blocks = qp.reshape(s[:-1] + (nb, QBLOCK)) * scale[..., None]
+    return blocks.reshape(s[:-1] + (nb * QBLOCK,))[..., :d].reshape(shape)
+
+
+def compress_tree(grads: Pytree, key: jax.Array) -> Pytree:
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten(
+        [stochastic_round_int8(g, k) for g, k in zip(leaves, keys)]
+    )
+
+
+def decompress_tree(comp: Pytree, like: Pytree) -> Pytree:
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    flat_comp = treedef.flatten_up_to(comp)
+    return treedef.unflatten(
+        [dequant_int8(c, l.shape) for c, l in zip(flat_comp, flat_like)]
+    )
+
+
+def cast_tree(grads: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda g: g.astype(dtype), grads)

@@ -1,0 +1,109 @@
+"""Data pipeline: deterministic, shardable, resumable.
+
+Two sources behind one interface:
+
+- :class:`SyntheticLM` — stateless synthetic token stream: batch(step) is
+  a pure function of (seed, step), so a preempted training job resumed by
+  another worker regenerates byte-identical batches (the data analogue of
+  the paper's idempotent-restart requirement);
+- :class:`TokenFileDataset` — memory-mapped token corpus chunked into
+  fixed-length windows, strided by (dp_rank, n_dp) for data parallelism.
+
+Both also drive the audio/vlm stub frontends (precomputed frame/patch
+embeddings derived deterministically from the token batch).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seq_len: int = 512
+    global_batch: int = 8
+    seed: int = 0
+
+
+class SyntheticLM:
+    """Zipf-ish synthetic tokens with enough structure for loss to fall."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig):
+        self.cfg = cfg
+        self.data = data
+
+    def batch(self, step: int, *, dp_rank: int = 0, n_dp: int = 1) -> Dict[str, jax.Array]:
+        d = self.data
+        if d.global_batch % n_dp:
+            raise ValueError(f"global_batch {d.global_batch} !% dp {n_dp}")
+        local = d.global_batch // n_dp
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(d.seed), step), dp_rank
+        )
+        k1, k2, k3 = jax.random.split(key, 3)
+        v = self.cfg.vocab_size
+        # mixture: random tokens + short repeated motifs (learnable structure)
+        base = jax.random.randint(k1, (local, d.seq_len + 1), 0, v)
+        motif = jax.random.randint(k2, (local, 8), 0, v)
+        reps = jnp.tile(motif, (1, (d.seq_len + 8) // 8))[:, : d.seq_len + 1]
+        use_motif = jax.random.bernoulli(k3, 0.5, (local, 1))
+        toks = jnp.where(use_motif, reps, base)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.cfg.is_encoder_decoder:
+            kf = jax.random.fold_in(key, 7)
+            batch["frames"] = jax.random.normal(
+                kf, (local, self.cfg.encoder_seq, self.cfg.d_model), jnp.float32
+            )
+        if self.cfg.n_vision_tokens:
+            kp = jax.random.fold_in(key, 8)
+            batch["patches"] = jax.random.normal(
+                kp, (local, self.cfg.n_vision_tokens, self.cfg.d_model), jnp.float32
+            )
+        return batch
+
+
+class TokenFileDataset:
+    """Memory-mapped uint16/uint32 token file -> fixed windows.
+
+    Deterministic addressing: window i of shard r covers tokens
+    [ (i*n_dp + r) * seq_len, ... ), so any worker can compute any batch.
+    """
+
+    def __init__(self, path: str, cfg: ArchConfig, data: DataConfig, dtype=np.uint16):
+        self.tokens = np.memmap(path, dtype=dtype, mode="r")
+        self.cfg = cfg
+        self.data = data
+
+    def n_batches(self, n_dp: int = 1) -> int:
+        per = self.data.seq_len + 1
+        windows = len(self.tokens) // per
+        return windows // self.data.global_batch
+
+    def batch(self, step: int, *, dp_rank: int = 0, n_dp: int = 1) -> Dict[str, jax.Array]:
+        d = self.data
+        local = d.global_batch // n_dp
+        per = d.seq_len + 1
+        rows = []
+        for b in range(local):
+            widx = step * d.global_batch + dp_rank * local + b
+            start = widx * per
+            rows.append(np.asarray(self.tokens[start : start + per], dtype=np.int32))
+        toks = jnp.asarray(np.stack(rows)) % self.cfg.vocab_size
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def write_synthetic_corpus(path: str, n_tokens: int, vocab: int, seed: int = 0) -> str:
+    """Materialize a synthetic corpus file (used by examples/tests)."""
+    rng = np.random.default_rng(seed)
+    arr = rng.integers(0, min(vocab, 65535), size=n_tokens, dtype=np.uint16)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    arr.tofile(path)
+    return path

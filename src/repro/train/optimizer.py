@@ -1,0 +1,207 @@
+"""Distributed AdamW, built from scratch (no optax in this environment).
+
+Scale features:
+- optimizer state inherits the parameter PartitionSpecs, so FSDP policies
+  ZeRO-shard the moments for free;
+- optional **8-bit moments** (blockwise int8 quantization, bnb-style):
+  mu/nu stored as int8 + fp32 scale per 128-value block → ~2.06 bytes of
+  optimizer state per parameter instead of 8.  This is what lets
+  nemotron-4-340b training fit a single 256-chip pod (EXPERIMENTS §Perf);
+- optional fp32 master copy when params are bf16;
+- global-norm clipping, linear-warmup + cosine schedule;
+- int8 stochastic-rounding gradient compression for the microbatch
+  accumulator (`repro.train.compression`).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+QBLOCK = 128
+
+
+# ----------------------------------------------------- layout-preserving int8
+# Quantization blocks run along the LAST dim so ``q`` keeps the parameter's
+# shape (and therefore its PartitionSpec — int8 moments stay ZeRO-sharded);
+# the per-block fp32 scale has shape[:-1] + (n_blocks,).
+def _lastdim_blocks(d: int) -> int:
+    return max(1, -(-d // QBLOCK))
+
+
+def quantize_blockwise(x: jax.Array) -> Dict[str, jax.Array]:
+    """Symmetric int8 quantization in QBLOCK-wide blocks along the last dim."""
+    x = x.astype(jnp.float32)
+    shape = x.shape if x.ndim else (1,)
+    d = shape[-1]
+    nb = _lastdim_blocks(d)
+    pad = nb * QBLOCK - d
+    xp = jnp.pad(x.reshape(shape), [(0, 0)] * (len(shape) - 1) + [(0, pad)])
+    blocks = xp.reshape(shape[:-1] + (nb, QBLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0  # (..., nb)
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    q = q.reshape(shape[:-1] + (nb * QBLOCK,))[..., :d].astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_blockwise(qd: Dict[str, jax.Array], shape, dtype=jnp.float32) -> jax.Array:
+    q, scale = qd["q"], qd["scale"]
+    s = q.shape if q.ndim else (1,)
+    d = s[-1]
+    nb = scale.shape[-1]
+    pad = nb * QBLOCK - d
+    qp = jnp.pad(q.reshape(s).astype(jnp.float32), [(0, 0)] * (len(s) - 1) + [(0, pad)])
+    blocks = qp.reshape(s[:-1] + (nb, QBLOCK)) * scale[..., None]
+    out = blocks.reshape(s[:-1] + (nb * QBLOCK,))[..., :d]
+    return out.reshape(shape).astype(dtype)
+
+
+# ------------------------------------------------------------------ schedule
+@dataclass(frozen=True)
+class Schedule:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    final_frac: float = 0.1
+
+    def __call__(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = self.peak_lr * step / max(self.warmup_steps, 1)
+        prog = jnp.clip(
+            (step - self.warmup_steps) / max(self.total_steps - self.warmup_steps, 1), 0.0, 1.0
+        )
+        cos = self.peak_lr * (
+            self.final_frac + (1 - self.final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        )
+        return jnp.where(step < self.warmup_steps, warm, cos)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    schedule: Schedule = Schedule()
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "f32"  # f32 | int8
+    master_fp32: bool = False  # keep fp32 master when params are low-precision
+
+
+# ------------------------------------------------------------------- optimizer
+def init_opt_state(params: Pytree, cfg: AdamWConfig) -> Pytree:
+    def zeros_like_moment(p):
+        if cfg.moments_dtype == "int8":
+            shape = p.shape if p.ndim else (1,)
+            return {
+                "q": jnp.zeros(p.shape, jnp.int8),
+                "scale": jnp.zeros(shape[:-1] + (_lastdim_blocks(shape[-1]),), jnp.float32),
+            }
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros_like_moment, params),
+        "nu": jax.tree.map(zeros_like_moment, params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params: Pytree, grads: Pytree, state: Pytree, cfg: AdamWConfig
+) -> Tuple[Pytree, Pytree, Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.schedule(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        cfg.clip_norm > 0, jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)), 1.0
+    )
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    use_master = "master" in state
+    ref_params = state["master"] if use_master else params
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        if cfg.moments_dtype == "int8":
+            mu_f = dequantize_blockwise(mu, p.shape)
+            nu_f = dequantize_blockwise(nu, p.shape)
+        else:
+            mu_f, nu_f = mu, nu
+        mu_f = cfg.b1 * mu_f + (1 - cfg.b1) * g
+        nu_f = cfg.b2 * nu_f + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu_f / bc1
+        nhat = nu_f / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        if cfg.moments_dtype == "int8":
+            mu_o, nu_o = quantize_blockwise(mu_f), quantize_blockwise(nu_f)
+        else:
+            mu_o, nu_o = mu_f, nu_f
+        return new_p, mu_o, nu_o
+
+    flat_p, treedef = jax.tree_util.tree_flatten(ref_params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+
+    outs = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_master = treedef.unflatten([o[0] for o in outs])
+    new_mu = treedef.unflatten([o[1] for o in outs])
+    new_nu = treedef.unflatten([o[2] for o in outs])
+
+    param_dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda m, dt: m.astype(dt), new_master, param_dtypes)
+
+    new_state = {"step": step, "mu": new_mu, "nu": new_nu}
+    if use_master:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr, "clip_scale": scale}
+    return new_params, new_state, metrics
+
+
+def opt_state_specs(param_specs_tree: Pytree, cfg: AdamWConfig) -> Pytree:
+    """PartitionSpecs for the optimizer state, derived from param specs.
+
+    int8 moments keep the parameter layout (blocks run along the last dim),
+    so ``q`` inherits the parameter spec verbatim and the per-block scale
+    inherits every axis except the last (which stays unsharded: the block
+    count rarely divides the mesh axis).  Everything stays ZeRO-sharded.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def moment_spec(spec):
+        if cfg.moments_dtype == "int8":
+            axes = tuple(spec)
+            scale_axes = axes[:-1] + (None,) if axes else (None,)
+            return {"q": spec, "scale": P(*scale_axes)}
+        return spec
+
+    is_spec = lambda x: isinstance(x, P)  # noqa: E731
+    state_specs = {
+        "step": P(),
+        "mu": jax.tree.map(moment_spec, param_specs_tree, is_leaf=is_spec),
+        "nu": jax.tree.map(moment_spec, param_specs_tree, is_leaf=is_spec),
+    }
+    if cfg.master_fp32:
+        state_specs["master"] = param_specs_tree
+    return state_specs

@@ -1,0 +1,92 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+Optional parallelism dimension for very deep models: the layer stack is
+split into S stages sharded over a ``pipe`` mesh axis; microbatches
+stream through the classic GPipe schedule (S + M - 1 slots, bubble
+fraction (S-1)/(S+M-1)).  Stage hand-off is a single
+``jax.lax.ppermute`` per slot — the TPU-native point-to-point.
+
+This module is deliberately self-contained (pure function over stacked
+stage parameters) so it composes with the rules engine: within a stage,
+parameters may still shard over "model"/"data" axes of the same mesh.
+
+The production mesh (DESIGN §3) does not reserve a pipe axis — FSDP+TP
+covers the assigned configs — but the feature is required at the
+3D-parallel scale this framework targets; `tests/test_pipeline.py`
+validates it on a host-device mesh against the sequential reference.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+Pytree = object
+
+
+def pipeline_apply(
+    mesh: Mesh,
+    stage_params: Pytree,  # leaves stacked over stages: (S, ...)
+    x: jax.Array,  # (M, mb, ...) microbatched input
+    stage_fn: Callable[[Pytree, jax.Array], jax.Array],
+    *,
+    axis: str = "pipe",
+) -> jax.Array:
+    """Run x through S pipeline stages; returns (M, mb, ...) outputs."""
+    n_stages = mesh.shape[axis]
+    m = x.shape[0]
+
+    def _stage(params_local, x_all):
+        # params_local: (1, ...) this stage's slice; x_all: full (M, mb, ...)
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        sid = jax.lax.axis_index(axis)
+        mb_shape = x_all.shape[1:]
+        state = jnp.zeros(mb_shape, x_all.dtype)  # activation in this stage
+        outputs = jnp.zeros_like(x_all)
+        fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def slot(t, carry):
+            state, outputs = carry
+            # stage 0 ingests microbatch t (garbage past M; masked later)
+            mb_idx = jnp.clip(t, 0, m - 1)
+            injected = jax.lax.dynamic_index_in_dim(x_all, mb_idx, 0, keepdims=False)
+            inp = jnp.where(sid == 0, injected, state)
+            out = stage_fn(params_local, inp)
+            # last stage banks microbatch (t - S + 1) once it's real
+            bank_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
+            do_bank = jnp.logical_and(sid == n_stages - 1, t >= n_stages - 1)
+            banked = jax.lax.dynamic_update_index_in_dim(
+                outputs, out.astype(outputs.dtype), bank_idx, 0
+            )
+            outputs = jnp.where(do_bank, banked, outputs)
+            # hand off to the next stage
+            state = jax.lax.ppermute(out, axis, fwd_perm)
+            return state, outputs
+
+        state, outputs = jax.lax.fori_loop(
+            0, m + n_stages - 1, slot, (state, outputs)
+        )
+        # broadcast the last stage's banked outputs to every stage so the
+        # result is replicated over the pipe axis
+        mask = (sid == n_stages - 1).astype(outputs.dtype)
+        return jax.lax.psum(outputs * mask, axis)
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = shard_map(
+        _stage,
+        mesh=mesh,
+        in_specs=(spec_params, P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn(stage_params, x)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_stages + n_microbatches - 1)

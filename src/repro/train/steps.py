@@ -1,0 +1,114 @@
+"""Step builders: the pjit-able train_step / serve_step for every arch.
+
+These are the functions the multi-pod dry-run lowers and the local
+trainer executes; one code path for both (ShapeDtypeStructs vs arrays).
+
+train_step(params, opt_state, batch, rng) -> (params, opt_state, metrics)
+    - microbatch gradient accumulation (scan), optional int8
+      stochastic-rounding compression of the accumulator,
+    - AdamW update (optionally 8-bit moments / fp32 master).
+
+serve_prefill(params, tokens, ...) -> last-position logits
+serve_decode(params, cache, tokens, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import Model, ModelRuntime
+from repro.train import compression
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    accum_dtype: str = "f32"  # f32 | bf16 | int8 (stochastic rounding)
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+def make_loss_fn(model: Model) -> Callable:
+    def loss_fn(params: Pytree, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        return model.loss(params, batch)
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model, tcfg: TrainStepConfig, grad_shardings=None
+) -> Callable:
+    loss_fn = make_loss_fn(model)
+    grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
+
+    def constrain(grads):
+        # pin gradients to the parameter sharding so cross-replica
+        # reduction lowers as reduce-scatter (ZeRO) instead of
+        # all-reduce-to-replicated (2x the bytes; §Perf iteration 1.3)
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def train_step(params, opt_state, batch, rng):
+        m = tcfg.microbatches
+        if m == 1:
+            loss, grads = grad_fn(params, batch)
+            grads = constrain(grads)
+        else:
+            # split the local batch into microbatches along dim 0
+            def slice_mb(i, x):
+                mb = x.shape[0] // m
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def accum_body(carry, i):
+                acc, total = carry
+                mb = jax.tree.map(partial(slice_mb, i), batch)
+                l, g = grad_fn(params, mb)
+                if tcfg.accum_dtype == "bf16":
+                    g = compression.cast_tree(g, jnp.bfloat16)
+                elif tcfg.accum_dtype == "int8":
+                    g = compression.decompress_tree(
+                        compression.compress_tree(g, jax.random.fold_in(rng, i)), g
+                    )
+                acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, constrain(g))
+                return (acc, total + l), None
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(
+                    p.shape, jnp.float32 if tcfg.accum_dtype != "bf16" else jnp.bfloat16
+                ),
+                params,
+            )
+            (gsum, lsum), _ = jax.lax.scan(accum_body, (acc0, 0.0), jnp.arange(m))
+            grads = jax.tree.map(lambda g: (g / m).astype(jnp.float32), gsum)
+            grads = constrain(grads)
+            loss = lsum / m
+
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, opt_state, tcfg.opt)
+        metrics = {"loss": loss, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ------------------------------------------------------------------- serving
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, tokens, frames=None, patches=None):
+        return model.prefill(params, tokens, frames=frames, patches=patches)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step

@@ -1,0 +1,96 @@
+"""Minimal property-testing shim.
+
+``hypothesis`` is not installable in this offline container; this module
+provides a tiny compatible subset (``@given`` + strategies) backed by
+seeded random case generation, and transparently defers to the real
+hypothesis when it is available.  Tests written against this API run
+unchanged in either environment.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+import random
+
+try:  # pragma: no cover - prefer the real thing when present
+    from hypothesis import given, settings  # type: ignore # noqa: F401
+    from hypothesis import strategies as st  # type: ignore
+
+    HAVE_HYPOTHESIS = True
+except Exception:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self.sample(rng)))
+
+        def filter(self, pred, _tries=100):
+            def sample(rng):
+                for _ in range(_tries):
+                    v = self.sample(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate too strict")
+
+            return _Strategy(sample)
+
+    class st:  # noqa: N801 - mimic hypothesis.strategies
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [
+                    elem.sample(rng) for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.sample(rng) for e in elems))
+
+    def given(*g_args, **g_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n_cases = int(wrapper._proptest_cases)
+                for case in range(n_cases):
+                    rng = random.Random((hash(fn.__qualname__) ^ case) & 0xFFFFFFFF)
+                    vals = [s.sample(rng) for s in g_args]
+                    kw = {k: s.sample(rng) for k, s in g_kwargs.items()}
+                    try:
+                        fn(*args, *vals, **kwargs, **kw)
+                    except Exception:
+                        print(f"proptest falsifying case #{case}: args={vals} kwargs={kw}")
+                        raise
+
+            wrapper._proptest_cases = 25
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=25, **_ignored):
+        def deco(fn):
+            fn._proptest_cases = max_examples
+            return fn
+
+        return deco

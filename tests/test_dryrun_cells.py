@@ -1,0 +1,54 @@
+"""Dry-run machinery guard: build+lower+compile representative cells on a
+small forced-device mesh (subprocess).  Catches sharding-spec regressions
+without the cost of the full 512-device fleet."""
+
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from jax.sharding import AxisType
+from repro.launch.cells import build_cell, lower_cell
+from repro.roofline.analysis import collective_bytes
+from repro.roofline.hbm import hbm_traffic
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+import dataclasses
+from repro.configs import get_arch
+
+CASES = [
+    ("ds-paper-100m", "train_4k", dict(n_layers=2, d_model=64, n_heads=4, head_dim=16,
+                                       n_kv_heads=2, d_ff=128, vocab_size=2048)),
+    ("mixtral-8x7b", "decode_32k", dict(n_layers=2, d_model=64, n_heads=4, head_dim=16,
+                                        n_kv_heads=2, moe_d_ff=128, n_experts=4,
+                                        top_k=2, vocab_size=2048, sliding_window=256)),
+    ("mamba2-1.3b", "long_500k", dict(n_layers=2, d_model=64, ssm_state=16,
+                                      ssm_headdim=16, vocab_size=2048)),
+]
+for arch, shape, over in CASES:
+    cfg = dataclasses.replace(get_arch(arch), **over)
+    cell = build_cell(arch, shape, mesh, cfg_override=cfg)
+    compiled = lower_cell(cell, mesh).compile()
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    st = collective_bytes(txt, 8)
+    hb = hbm_traffic(txt)
+    assert ma.temp_size_in_bytes >= 0 and hb.bytes_jnp > 0
+    print(f"CELL-OK {arch} {shape} colls={sum(st.count_by_op.values())}")
+print("ALL-OK")
+"""
+
+
+def test_cells_lower_on_small_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True, env=env,
+        timeout=560,
+    )
+    assert "ALL-OK" in res.stdout, f"stdout={res.stdout}\nstderr={res.stderr[-3000:]}"

@@ -1,0 +1,173 @@
+"""End-to-end: the DS control plane driving real JAX training/serving jobs.
+
+These are the paper's workflow in miniature: submit step-span training
+jobs, run a preemptible fleet, verify idempotent restart (CHECK_IF_DONE),
+checkpoint-based resume after preemption, and the serve/eval Somethings.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.launch.serve  # noqa: F401  (registers distributed-serve)
+import repro.launch.train  # noqa: F401  (registers distributed-train/eval)
+from repro.core import (
+    DSConfig,
+    DSRuntime,
+    FleetFile,
+    JobFile,
+    SimRunner,
+    VirtualClock,
+    step_span_job_file,
+)
+from repro.train.checkpoint import latest_step
+
+ARCH_OVERRIDES = "reduced"
+TRAIN_SHARED = {
+    "arch": "ds-paper-100m",
+    "arch_overrides": ARCH_OVERRIDES,
+    "seq_len": 32,
+    "global_batch": 2,
+    "lr": 1e-3,
+    "warmup_steps": 2,
+}
+
+
+def _runtime(tmp_path, clk, *, machines=2, payload="distributed-train", **cfg_kwargs):
+    kwargs = dict(
+        app_name="E2E",
+        payload=payload,
+        cluster_machines=machines,
+        tasks_per_machine=1,
+        machine_type=["sim.large"],
+        machine_price=1.0,
+        sqs_message_visibility=240.0,
+        max_receive_count=8,
+        check_if_done=True,
+        expected_number_files=1,
+        min_file_size_bytes=2,
+    )
+    kwargs.update(cfg_kwargs)
+    cfg = DSConfig(**kwargs)
+    rt = DSRuntime(cfg, store_root=str(tmp_path / "store"), clock=clk)
+    rt.setup()
+    return rt
+
+
+def test_train_spans_to_completion_and_loss_falls(tmp_path):
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk)
+    jf = step_span_job_file(arch="ds-paper-100m", total_steps=12, span=4, run="r1",
+                            shared=dict(TRAIN_SHARED, total_steps=12))
+    rt.submit_job(jf)
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    summary = SimRunner(rt, tick_seconds=30.0).run(max_ticks=400)
+    assert summary.jobs_done == 3, f"all spans must complete: {summary}"
+    assert latest_step(rt.store, "r1") == 12
+    # loss trajectory recorded in the span DONE markers must decrease
+    first = rt.store.get_json("runs/r1/spans/000000-000004/DONE.json")
+    last = rt.store.get_json("runs/r1/spans/000008-000012/DONE.json")
+    assert last["final_loss"] < first["final_loss"], (first, last)
+
+
+def test_resubmission_skips_completed_spans(tmp_path):
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk)
+    jf = step_span_job_file(arch="ds-paper-100m", total_steps=8, span=4, run="r2",
+                            shared=dict(TRAIN_SHARED, total_steps=8))
+    rt.submit_job(jf)
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    s1 = SimRunner(rt, tick_seconds=30.0).run(max_ticks=400)
+    assert s1.jobs_done == 2
+
+    # paper semantics: resubmit the WHOLE job file; only missing work runs
+    rt2 = _runtime(tmp_path, clk)
+    rt2.submit_job(jf)
+    rt2.start_cluster(FleetFile(startup_seconds=0.0))
+    s2 = SimRunner(rt2, tick_seconds=30.0).run(max_ticks=400)
+    assert s2.jobs_skipped == 2 and s2.jobs_done == 0, f"{s2}"
+
+
+def test_training_survives_aggressive_preemption(tmp_path):
+    """Node-failure drill: ~2 preemptions/instance/hour, virtual time.
+
+    The queue's visibility timeout + checkpoint resume must still drive
+    training to 100% completion with a correct final checkpoint.
+    """
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk, machines=3)
+    jf = step_span_job_file(arch="ds-paper-100m", total_steps=12, span=4, run="r3",
+                            shared=dict(TRAIN_SHARED, total_steps=12, ckpt_every=2))
+    rt.submit_job(jf)
+    rt.start_cluster(FleetFile(startup_seconds=0.0, preemption_rate_per_hour=2.0, market_seed=11))
+    summary = SimRunner(rt, tick_seconds=120.0).run(max_ticks=600)
+    assert latest_step(rt.store, "r3") == 12, f"training did not finish: {summary}"
+    assert rt.queue.counts()["dead"] == 0
+
+
+def test_out_of_order_span_waits_for_prerequisite(tmp_path):
+    """A span whose prerequisite checkpoint is missing fails fast and is
+    retried via visibility timeout until an earlier span produces it."""
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk, machines=1, sqs_message_visibility=90.0)
+    # submit ONLY the second span first, then the first span
+    jf = step_span_job_file(arch="ds-paper-100m", total_steps=8, span=4, run="r4",
+                            shared=dict(TRAIN_SHARED, total_steps=8))
+    second, first = jf.groups[1], jf.groups[0]
+    jf2 = JobFile(shared=jf.shared, groups=[second])
+    rt.submit_job(jf2)
+    rt.submit_job(JobFile(shared=jf.shared, groups=[first]))
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    summary = SimRunner(rt, tick_seconds=60.0).run(max_ticks=400)
+    assert latest_step(rt.store, "r4") == 8
+    assert summary.jobs_done == 2
+
+
+def test_serve_payload_writes_completions(tmp_path):
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk, payload="distributed-serve", machines=1)
+    rt.submit_job(
+        JobFile(
+            shared={
+                "arch": "ds-paper-100m",
+                "arch_overrides": ARCH_OVERRIDES,
+                "max_new_tokens": 4,
+                "max_len": 32,
+            },
+            groups=[
+                {"prompts": [[1, 2, 3], [4, 5]], "output_prefix": "serve/g0"},
+                {"prompts": [[7, 8, 9, 10]], "output_prefix": "serve/g1"},
+            ],
+        )
+    )
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    summary = SimRunner(rt, tick_seconds=30.0).run(max_ticks=200)
+    assert summary.jobs_done == 2
+    res = rt.store.get_json("serve/g0/RESULTS.json")
+    assert len(res["requests"]) == 2
+    for r in res["requests"].values():
+        assert len(r["completion"]) == 4
+
+
+def test_eval_payload_after_training(tmp_path):
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk)
+    jf = step_span_job_file(arch="ds-paper-100m", total_steps=4, span=4, run="r5",
+                            shared=dict(TRAIN_SHARED, total_steps=4))
+    rt.submit_job(jf)
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    SimRunner(rt, tick_seconds=30.0).run(max_ticks=200)
+
+    rt2 = _runtime(tmp_path, clk, payload="distributed-eval")
+    rt2.submit_job(
+        JobFile(
+            shared=dict(TRAIN_SHARED, run="r5", n_batches=2),
+            groups=[{"shard": 0, "output_prefix": "runs/r5/eval/shard0"},
+                    {"shard": 1, "output_prefix": "runs/r5/eval/shard1"}],
+        )
+    )
+    rt2.start_cluster(FleetFile(startup_seconds=0.0))
+    s = SimRunner(rt2, tick_seconds=30.0).run(max_ticks=200)
+    assert s.jobs_done == 2
+    m = rt2.store.get_json("runs/r5/eval/shard0/METRICS.json")
+    assert np.isfinite(m["loss"]) and m["ckpt_step"] == 4

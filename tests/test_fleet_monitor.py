@@ -1,0 +1,184 @@
+"""Spot fleet, ECS placement, and monitor behaviour (paper Steps 3-4)."""
+
+import os
+
+import pytest
+
+from repro.core import (
+    DSConfig,
+    DSRuntime,
+    DurableQueue,
+    ECSCluster,
+    FleetFile,
+    InstanceState,
+    JobFile,
+    Monitor,
+    Service,
+    SimRunner,
+    SpotFleet,
+    TaskDefinition,
+    VirtualClock,
+    register_payload,
+)
+
+
+def mkfleet(clk, **ff_kwargs):
+    ff = FleetFile(startup_seconds=5.0, **ff_kwargs)
+    return SpotFleet(ff, clock=clk, app_name="T")
+
+
+def test_fleet_fulfills_target_after_startup():
+    clk = VirtualClock()
+    fleet = mkfleet(clk)
+    fleet.request(target_capacity=3, bid=1.0, machine_types=["sim.large"])
+    assert len(fleet.pending()) == 3 and not fleet.running()
+    clk.advance(5.0)
+    fleet.tick()
+    assert len(fleet.running()) == 3
+
+
+def test_outbid_gets_no_capacity_then_recovers():
+    clk = VirtualClock()
+    fleet = mkfleet(clk)
+    fleet.request(target_capacity=2, bid=0.0001, machine_types=["sim.large"])
+    assert fleet.fulfilled_capacity() == 0  # priced out
+    fleet.bid = 1.0  # market came back under our (new) bid
+    fleet.tick()
+    assert fleet.fulfilled_capacity() == 2
+
+
+def test_preemption_and_backfill():
+    clk = VirtualClock()
+    fleet = mkfleet(clk, preemption_rate_per_hour=60.0, market_seed=7)  # ~1/min
+    fleet.request(target_capacity=4, bid=1.0, machine_types=["sim.small"])
+    clk.advance(5.0)
+    fleet.tick()
+    preempted = 0
+    for _ in range(60):
+        clk.advance(60.0)
+        dead = fleet.tick()
+        preempted += sum(1 for i in dead if i.terminate_reason == "spot-preemption")
+        # back-fill restores the target on the same tick
+        assert fleet.fulfilled_capacity() == 4
+    assert preempted > 5, "preemption injection should have fired repeatedly"
+
+
+def test_cheapest_mode_no_backfill():
+    clk = VirtualClock()
+    fleet = mkfleet(clk, preemption_rate_per_hour=120.0, market_seed=3)
+    fleet.request(target_capacity=4, bid=1.0, machine_types=["sim.small"])
+    clk.advance(5.0)
+    fleet.tick()
+    fleet.replace_on_terminate = False  # what cheapest mode sets
+    fleet.modify_target(1)
+    for _ in range(30):
+        clk.advance(60.0)
+        fleet.tick()
+    assert fleet.fulfilled_capacity() <= 1
+
+
+def test_placement_respects_capacity():
+    clk = VirtualClock()
+    fleet = mkfleet(clk)
+    fleet.request(target_capacity=1, bid=1.0, machine_types=["sim.large"])  # 8 vcpu, 16GB
+    clk.advance(5.0)
+    fleet.tick()
+    cluster = ECSCluster()
+    # each task wants 4 vcpus -> exactly 2 fit on a sim.large
+    td = TaskDefinition(family="t", payload="p", cpu_shares=4096, memory_mb=4096, docker_cores=1)
+    cluster.register_service(Service(name="S", task_definition=td, desired_count=5))
+    placed = cluster.place("S", fleet, clk.now())
+    assert len(placed) == 2, "bin-packing must stop at instance capacity"
+    # oversized task never places (the paper's documented failure mode)
+    td_big = TaskDefinition(family="b", payload="p", cpu_shares=99999, memory_mb=4096, docker_cores=1)
+    cluster.register_service(Service(name="B", task_definition=td_big, desired_count=1))
+    assert cluster.place("B", fleet, clk.now()) == []
+
+
+def test_oversized_instance_takes_extra_tasks():
+    """'ECS will keep placing Dockers onto an instance until it is full.'"""
+    clk = VirtualClock()
+    fleet = mkfleet(clk)
+    fleet.request(target_capacity=1, bid=2.0, machine_types=["sim.xlarge"])  # 16 vcpu
+    clk.advance(5.0)
+    fleet.tick()
+    cluster = ECSCluster()
+    td = TaskDefinition(family="t", payload="p", cpu_shares=2048, memory_mb=2048, docker_cores=1)
+    cluster.register_service(Service(name="S", task_definition=td, desired_count=8))
+    placed = cluster.place("S", fleet, clk.now())
+    assert len(placed) == 8  # more than the 2-ish the user probably intended
+
+
+@register_payload("noop-sleep")
+def noop_sleep(job, ctx):
+    for _ in range(int(job.get("beats", 1))):
+        ctx.heartbeat()
+    return {"ok": True}
+
+
+@register_payload("always-fails")
+def always_fails(job, ctx):
+    raise ValueError("intentional failure")
+
+
+def _runtime(tmp_path, clk, payload="noop-sleep", machines=2, **cfg_kwargs):
+    kwargs = dict(
+        app_name="T",
+        payload=payload,
+        cluster_machines=machines,
+        tasks_per_machine=1,
+        machine_type=["sim.large"],
+        machine_price=1.0,
+        sqs_message_visibility=180.0,
+        check_if_done=False,
+        monitor_poll_seconds=60.0,
+    )
+    kwargs.update(cfg_kwargs)
+    cfg = DSConfig(**kwargs)
+    rt = DSRuntime(cfg, store_root=str(tmp_path / "store"), clock=clk)
+    rt.setup()
+    return rt
+
+
+def test_sim_runner_drains_queue_and_tears_down(tmp_path):
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk)
+    rt.submit_job(JobFile(shared={"beats": 1}, groups=[{"g": i} for i in range(10)]))
+    rt.start_cluster(FleetFile(startup_seconds=5.0))
+    runner = SimRunner(rt, tick_seconds=60.0)
+    summary = runner.run()
+    assert summary.jobs_done == 10
+    assert rt.queue.counts() == {"visible": 0, "in_flight": 0, "dead": 0}
+    # teardown: fleet cancelled, logs exported to the store
+    assert rt.fleet.fulfilled_capacity() == 0
+    assert any(o.key.startswith("logs/T/") for o in rt.store.list("logs/"))
+
+
+def test_poison_jobs_end_in_dlq_without_wedging(tmp_path):
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk, payload="always-fails", max_receive_count=2,
+                  sqs_message_visibility=60.0)
+    rt.submit_job(JobFile(groups=[{"g": 0}, {"g": 1}]))
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    runner = SimRunner(rt, tick_seconds=60.0)
+    summary = runner.run(max_ticks=50)
+    assert summary.jobs_done == 0
+    assert rt.monitor.finished, "cluster must tear down despite poison jobs"
+
+
+def test_idle_alarm_terminates_stalled_instance(tmp_path):
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk, machines=1, idle_alarm_seconds=900.0)
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    rt.fleet.tick()
+    monitor = rt.make_monitor()
+    # queue is empty -> but make it look non-empty so teardown doesn't race
+    rt.queue.send({"g": 0})
+    rt.queue.receive(visibility_timeout=10_000.0)  # someone holds a job forever
+    inst = rt.fleet.running()[0]
+    inst.last_heartbeat = clk.now()
+    for _ in range(16):
+        clk.advance(60.0)
+        report = monitor.tick()
+    assert inst.state == InstanceState.TERMINATED
+    assert inst.terminate_reason == "idle-alarm"

@@ -1,0 +1,166 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "bh,s,hd,block",
+    [
+        (2, 128, 64, 64),
+        (1, 256, 128, 128),
+        (3, 512, 64, 256),
+        (2, 128, 192, 64),  # nemotron head_dim
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(bh, s, hd, block, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (bh, s, hd), dtype)
+    k = jax.random.normal(ks[1], (bh, s, hd), dtype)
+    v = jax.random.normal(ks[2], (bh, s, hd), dtype)
+    from repro.kernels.flash_attention import flash_attention_bhsd
+
+    out = flash_attention_bhsd(
+        q, k, v, causal=causal, block_q=block, block_k=block, interpret=True
+    )
+    want = ref.attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    s, hd = 256, 64
+    ks = jax.random.split(KEY, 3)
+    q, k, v = (jax.random.normal(kk, (2, s, hd), jnp.float32) for kk in ks)
+    from repro.kernels.flash_attention import flash_attention_bhsd
+
+    out = flash_attention_bhsd(
+        q, k, v, causal=True, window=window, block_q=64, block_k=64, interpret=True
+    )
+    want = ref.attention_reference(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_model_layout():
+    b, s, h, hd = 2, 128, 4, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    from repro.models.layers import attention_scores
+
+    want = attention_scores(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+# ----------------------------------------------------------------- SSD kernel
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,l,h,p,n,chunk,block_h",
+    [
+        (2, 64, 4, 16, 16, 16, 2),
+        (1, 128, 8, 32, 32, 32, 4),
+        (2, 256, 16, 64, 128, 128, 8),  # mamba2-1.3b tile shape
+    ],
+)
+def test_ssd_kernel_sweep(b, l, h, p, n, chunk, block_h, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+    B = jax.random.normal(ks[3], (b, l, n), dtype)
+    C = jax.random.normal(ks[4], (b, l, n), dtype)
+
+    y, final = ops.ssd(x, dt, A, B, C, chunk=chunk, block_h=block_h, interpret=True)
+    y_ref, final_ref = ref.ssd_reference(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **tol(dtype)
+    )
+    np.testing.assert_allclose(
+        np.asarray(final), np.asarray(final_ref), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_ssd_kernel_matches_sequential_recurrence():
+    """Chunk kernel + glue == naive per-token recurrence."""
+    b, l, h, p, n, chunk = 1, 32, 2, 8, 8, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, l, n))
+    C = jax.random.normal(ks[4], (b, l, n))
+
+    y, final = ops.ssd(x, dt, A, B, C, chunk=chunk, interpret=True)
+
+    from repro.models.ssm import ssd_decode_step
+
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        yt, state = ssd_decode_step(state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(yt)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(state), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 256), (2, 8, 512), (3, 5, 128)])
+def test_rmsnorm_sweep(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], (shape[-1],), jnp.float32) + 1.0
+    out = ops.rmsnorm(x, w, interpret=True)
+    want = ref.rmsnorm_reference(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_model_attention_kernel_path():
+    """The model's attn_impl='kernel' path equals the direct path."""
+    from repro.configs import get_arch, reduced
+    from repro.models import Model, ModelRuntime
+
+    cfg = reduced(get_arch("ds-paper-100m"))
+    rng = jax.random.PRNGKey(3)
+    m_direct = Model(cfg, ModelRuntime(attn_impl="direct"))
+    m_kernel = Model(cfg, ModelRuntime(attn_impl="kernel", attn_chunk=16))
+    params = m_direct.init(rng)
+    toks = jax.random.randint(rng, (2, 64), 0, cfg.vocab_size)
+    a = m_direct.forward(params, toks)
+    b = m_kernel.forward(params, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_model_ssd_kernel_path():
+    from repro.configs import get_arch, reduced
+    from repro.models import Model, ModelRuntime
+
+    cfg = reduced(get_arch("mamba2-1.3b"))
+    rng = jax.random.PRNGKey(4)
+    m_ref = Model(cfg, ModelRuntime(use_ssd_kernel=False))
+    m_k = Model(cfg, ModelRuntime(use_ssd_kernel=True))
+    params = m_ref.init(rng)
+    toks = jax.random.randint(rng, (2, 32), 0, cfg.vocab_size)
+    a = m_ref.forward(params, toks)
+    b = m_k.forward(params, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,55 @@
+"""Pipeline parallelism vs sequential reference (4-stage host-device mesh).
+
+Runs in a subprocess so XLA_FLAGS (forced host device count) never leaks
+into the main test process (smoke tests must see 1 device).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.train.pipeline import pipeline_apply, bubble_fraction
+
+mesh = jax.make_mesh((4,), ("pipe",), axis_types=(AxisType.Auto,))
+S, M, MB, D = 4, 8, 2, 16
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (S, D, D)) * 0.3
+b = jax.random.normal(jax.random.fold_in(key, 1), (S, D)) * 0.1
+params = {"w": w, "b": b}
+x = jax.random.normal(jax.random.fold_in(key, 2), (M, MB, D))
+
+def stage_fn(p, h):
+    return jnp.tanh(h @ p["w"] + p["b"])
+
+# sequential reference
+ref = x
+for s in range(S):
+    ref = jnp.tanh(ref @ w[s] + b[s])
+
+with jax.set_mesh(mesh):
+    out = jax.jit(lambda pp, xx: pipeline_apply(mesh, pp, xx, stage_fn))(params, x)
+
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+assert abs(bubble_fraction(4, 8) - 3/11) < 1e-9
+print("PIPELINE-OK")
+"""
+
+
+@pytest.mark.parametrize("n", [1])
+def test_pipeline_matches_sequential(n):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True, env=env,
+        timeout=300,
+    )
+    assert "PIPELINE-OK" in res.stdout, f"stdout={res.stdout}\nstderr={res.stderr[-2000:]}"

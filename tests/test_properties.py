@@ -1,0 +1,187 @@
+"""Property-based tests for the system's invariants.
+
+Uses hypothesis when available, else the seeded shim in ``proptest.py``.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from proptest import given, settings, st
+
+from repro.core import DurableQueue, VirtualClock
+from repro.core.jobs import JobFile
+from repro.train import compression
+from repro.train.optimizer import dequantize_blockwise, quantize_blockwise
+
+
+# ------------------------------------------------------------------- queue
+@settings(max_examples=20, deadline=None)
+@given(
+    n_msgs=st.integers(1, 30),
+    visibility=st.floats(1.0, 50.0),
+    max_rc=st.integers(1, 5),
+    fail_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 10_000),
+)
+def test_queue_conservation(tmp_path_factory, n_msgs, visibility, max_rc, fail_frac, seed):
+    """Invariant: every message is eventually either acknowledged exactly
+    once or dead-lettered — none lost, none duplicated-on-ack."""
+    import random
+
+    rng = random.Random(seed)
+    clk = VirtualClock()
+    q = DurableQueue(
+        os.path.join(tmp_path_factory.mktemp("q"), "q.sqlite"),
+        default_visibility=visibility,
+        max_receive_count=max_rc,
+        clock=clk,
+    )
+    q.send_batch([{"i": i} for i in range(n_msgs)])
+    acked = set()
+    for _ in range(n_msgs * (max_rc + 2) * 3):
+        m = q.receive()
+        if m is None:
+            clk.advance(visibility + 0.1)
+            c = q.counts()
+            if c["visible"] == 0 and c["in_flight"] == 0:
+                break
+            continue
+        if rng.random() >= fail_frac or m.receive_count >= max_rc:
+            assert m.body["i"] not in acked, "double ack of the same message"
+            if q.delete(m):
+                acked.add(m.body["i"])
+    c = q.counts()
+    assert c["visible"] == 0 and c["in_flight"] == 0
+    dead = {m.body["i"] for m in q.dead_letters()}
+    assert acked | dead == set(range(n_msgs)), "message lost"
+    assert acked & dead == set(), "message both acked and dead-lettered"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shared=st.integers(0, 5),
+    groups=st.lists(st.integers(0, 100), min_size=0, max_size=20),
+)
+def test_jobfile_expansion_properties(shared, groups):
+    jf = JobFile(
+        shared={f"s{i}": i for i in range(shared)},
+        groups=[{"g": g} for g in groups],
+    )
+    bodies = jf.expand()
+    assert len(bodies) == len(groups)
+    for i, b in enumerate(bodies):
+        assert b["g"] == groups[i]
+        for j in range(shared):
+            assert b[f"s{j}"] == j  # shared keys present in every job
+        assert b["group_index"] == i
+
+
+def test_jobfile_group_overrides_shared():
+    jf = JobFile(shared={"x": 1}, groups=[{"x": 2}, {}])
+    bodies = jf.expand()
+    assert bodies[0]["x"] == 2 and bodies[1]["x"] == 1
+
+
+# ------------------------------------------------------------- quantization
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 8),
+    cols=st.integers(1, 700),
+    scale=st.floats(1e-6, 1e3),
+    seed=st.integers(0, 1000),
+)
+def test_int8_moment_quantization_bounded_error(rows, cols, scale, seed):
+    """|dequant(quant(x)) - x| <= blockmax/127 elementwise."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols)) * scale
+    qd = quantize_blockwise(x)
+    y = dequantize_blockwise(qd, x.shape)
+    err = np.asarray(jnp.abs(y - x))
+    # bound: half a quantization step per 128-block (use global max as a cap)
+    bound = float(jnp.max(jnp.abs(x))) / 127.0 + 1e-12
+    assert err.max() <= bound * 1.0001
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-5, 10.0))
+def test_stochastic_rounding_unbiased(seed, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (16, 256)) * scale
+    acc = jnp.zeros_like(g)
+    n = 64
+    for i in range(n):
+        qd = compression.stochastic_round_int8(g, jax.random.PRNGKey(seed * 131 + i))
+        acc = acc + compression.dequant_int8(qd, g.shape)
+    mean = acc / n
+    # bias shrinks as 1/sqrt(n); allow 5 sigma of the quantization noise
+    step = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(mean - g))) < 5 * step / np.sqrt(n) + 1e-9
+
+
+# ------------------------------------------------------------------ data
+@settings(max_examples=10, deadline=None)
+@given(
+    step=st.integers(0, 50),
+    n_dp=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 100),
+)
+def test_data_pipeline_determinism_and_disjointness(step, n_dp, seed):
+    from repro.configs import get_arch, reduced
+    from repro.train.data import DataConfig, SyntheticLM
+
+    cfg = reduced(get_arch("ds-paper-100m"))
+    ds = SyntheticLM(cfg, DataConfig(seq_len=16, global_batch=4, seed=seed))
+    a = ds.batch(step, dp_rank=0, n_dp=n_dp)
+    b = ds.batch(step, dp_rank=0, n_dp=n_dp)
+    assert (a["tokens"] == b["tokens"]).all(), "same (seed, step, rank) must repeat"
+    c = ds.batch(step + 1, dp_rank=0, n_dp=n_dp)
+    assert not (a["tokens"] == c["tokens"]).all(), "steps must differ"
+    # labels are next-token shifted view of the same stream
+    assert a["labels"].shape == a["tokens"].shape
+
+
+# --------------------------------------------------------------- checkpoint
+@settings(max_examples=10, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 5), st.integers(1, 17)),
+    dt=st.sampled_from(["float32", "bfloat16", "int32"]),
+    seed=st.integers(0, 1000),
+)
+def test_checkpoint_roundtrip_property(tmp_path_factory, shape, dt, seed):
+    from repro.core.storage import ObjectStore
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    store = ObjectStore(str(tmp_path_factory.mktemp("ckpt")))
+    x = (jax.random.normal(jax.random.PRNGKey(seed), shape) * 100).astype(dt)
+    tree = {"x": x, "nested": {"y": jnp.arange(3)}}
+    save_checkpoint(store, "r", seed, tree)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    got, _ = restore_checkpoint(store, "r", seed, like)
+    assert got["x"].dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(got["x"], np.float32), np.asarray(x, np.float32))
+
+
+# ------------------------------------------------------------------- moe
+@settings(max_examples=8, deadline=None)
+@given(
+    toks=st.integers(2, 24),
+    e=st.sampled_from([2, 4, 8]),
+    k=st.integers(1, 2),
+    seed=st.integers(0, 500),
+)
+def test_moe_gather_matches_dense_when_capacity_ample(toks, e, k, seed):
+    import dataclasses
+
+    from repro.configs import get_arch, reduced
+    from repro.models.moe import apply_moe, moe_init
+
+    cfg = dataclasses.replace(
+        reduced(get_arch("mixtral-8x7b")),
+        n_experts=e, top_k=min(k, e), capacity_factor=float(e) * 2,
+    )
+    p = moe_init(jax.random.PRNGKey(seed), cfg, jnp.float32, 0.1)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, toks, cfg.d_model))
+    yd = apply_moe(p, x, cfg, "dense")
+    yg = apply_moe(p, x, cfg, "capacity")
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yd), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,110 @@
+"""SQS-semantics tests for the durable queue."""
+
+import os
+
+import pytest
+
+from repro.core import DurableQueue, VirtualClock
+
+
+@pytest.fixture()
+def q(tmp_path):
+    clk = VirtualClock()
+    queue = DurableQueue(
+        os.path.join(tmp_path, "q.sqlite"),
+        default_visibility=30.0,
+        max_receive_count=3,
+        clock=clk,
+    )
+    queue.clk = clk
+    return queue
+
+
+def test_fifo_ish_delivery_and_ack(q):
+    ids = q.send_batch([{"i": i} for i in range(5)])
+    assert len(set(ids)) == 5
+    seen = []
+    while True:
+        m = q.receive()
+        if m is None:
+            break
+        seen.append(m.body["i"])
+        assert q.delete(m)
+    assert sorted(seen) == list(range(5))
+    assert q.counts() == {"visible": 0, "in_flight": 0, "dead": 0}
+
+
+def test_visibility_timeout_redelivers(q):
+    q.send({"job": 1})
+    m1 = q.receive(visibility_timeout=10.0)
+    assert m1 is not None
+    assert q.receive() is None  # hidden while in flight
+    q.clk.advance(10.1)
+    m2 = q.receive()
+    assert m2 is not None and m2.id == m1.id and m2.receive_count == 2
+
+
+def test_stale_receipt_cannot_ack(q):
+    q.send({"job": 1})
+    m1 = q.receive(visibility_timeout=5.0)
+    q.clk.advance(6.0)
+    m2 = q.receive()  # re-delivered; m1's receipt is now stale
+    assert not q.delete(m1), "stale receipt must not delete"
+    assert q.delete(m2)
+
+
+def test_change_visibility_extends_lease(q):
+    q.send({"job": 1})
+    m = q.receive(visibility_timeout=10.0)
+    q.clk.advance(8.0)
+    assert q.change_visibility(m, 20.0)
+    q.clk.advance(12.0)  # original lease would have expired
+    assert q.receive() is None, "extended lease must still hide the message"
+    q.clk.advance(9.0)
+    assert q.receive() is not None
+
+
+def test_dead_letter_after_max_receives(q):
+    q.send({"poison": True})
+    for attempt in range(3):  # max_receive_count = 3
+        m = q.receive(visibility_timeout=1.0)
+        assert m is not None and m.receive_count == attempt + 1
+        q.clk.advance(1.1)  # lease expires without an ack (worker "failed")
+    # 4th receive attempt moves it to the DLQ
+    m = q.receive()
+    assert m is None
+    dl = q.dead_letters()
+    assert len(dl) == 1 and dl[0].body == {"poison": True}
+
+    # operator redrive brings it back
+    assert q.redrive_dead_letters() == 1
+    assert q.receive() is not None
+
+
+def test_release_does_not_consume_retry_budget(q):
+    q.send({"waiting": True})
+    for _ in range(10):  # far beyond max_receive_count
+        m = q.receive(visibility_timeout=30.0)
+        assert m is not None, "released message must keep coming back"
+        assert m.receive_count == 1, "release must refund the receive"
+        assert q.release(m, delay=2.0)
+        assert q.receive() is None  # hidden for the delay
+        q.clk.advance(2.1)
+    m = q.receive()
+    assert m is not None
+    assert q.delete(m)
+
+
+def test_durability_across_reopen(tmp_path):
+    path = os.path.join(tmp_path, "q.sqlite")
+    clk = VirtualClock()
+    q1 = DurableQueue(path, clock=clk)
+    q1.send_batch([{"i": i} for i in range(3)])
+    m = q1.receive(visibility_timeout=60.0)
+    q1.close()
+    # crash + restart: a new process attaches to the same file
+    q2 = DurableQueue(path, clock=clk)
+    c = q2.counts()
+    assert c["visible"] == 2 and c["in_flight"] == 1
+    clk.advance(61.0)
+    assert q2.counts()["visible"] == 3, "in-flight message resurfaced after crash"
