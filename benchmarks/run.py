@@ -57,6 +57,20 @@ def bench_queue_throughput() -> None:
         emit("queue_send", (t1 - t0) / n * 1e6, f"{n / (t1 - t0):.0f} msgs/s")
         emit("queue_recv_ack", (t2 - t1) / n * 1e6, f"{n / (t2 - t1):.0f} msgs/s")
 
+    # batched claim/ack: one transaction per 32 messages instead of per message
+    with tempfile.TemporaryDirectory() as d:
+        q = DurableQueue(os.path.join(d, "qb.sqlite"), default_visibility=60)
+        n = 2000
+        q.send_batch([{"i": i} for i in range(n)])
+        t0 = time.perf_counter()
+        while True:
+            msgs = q.receive_batch(32)
+            if not msgs:
+                break
+            q.delete_batch(msgs)
+        t1 = time.perf_counter()
+        emit("queue_recv_ack_batch32", (t1 - t0) / n * 1e6, f"{n / (t1 - t0):.0f} msgs/s")
+
 
 def bench_lifecycle() -> None:
     """Figure 1: setup -> submitJob -> startCluster -> monitor, 64 noop jobs."""

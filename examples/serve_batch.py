@@ -45,6 +45,11 @@ def main() -> int:
                 "max_new_tokens": 6,
                 "max_len": 64,
                 "max_batch": 2,
+                # serving perf knobs (docs/serving.md): chunked prefill
+                # ingests whole prompt slices per dispatch; fused mode
+                # issues ONE decode dispatch per tick for any position mix
+                "prefill_chunk": 8,
+                "dispatch_mode": "fused",
             },
             groups=batches,
         )
@@ -57,6 +62,15 @@ def main() -> int:
         res = rt.store.get_json(f"serve/batch{i}/RESULTS.json")
         for uid, r in sorted(res["requests"].items()):
             print(f"batch{i} {uid}: prompt={r['prompt']} -> completion={r['completion']}")
+        # same denominator as benchmarks/bench_serving.py: every token that
+        # crossed the device (emitted + ingested) counts
+        toks = max(1, res["tokens_emitted"] + res["prompt_tokens_ingested"])
+        print(
+            f"batch{i} dispatches: decode={res['decode_dispatches']} "
+            f"prefill={res['prefill_dispatches']} "
+            f"dispatches/token={res['dispatches'] / toks:.2f} "
+            f"prompt_tokens_ingested={res['prompt_tokens_ingested']}"
+        )
     return 0
 
 

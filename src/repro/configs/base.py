@@ -228,6 +228,11 @@ SHAPES: Dict[str, ShapeSpec] = {
     "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+    # serving-engine hot paths (chunked prefill writes the decode cache in
+    # one dispatch; ragged decode advances per-row positions [B] — the
+    # continuous-batching step ServeEngine issues once per tick)
+    "serve_prefill_32k": ShapeSpec("serve_prefill_32k", 32_768, 32, "serve_prefill"),
+    "serve_ragged_32k": ShapeSpec("serve_ragged_32k", 32_768, 128, "serve_decode"),
 }
 
 
@@ -235,6 +240,14 @@ def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
     """Is (arch x shape) a runnable cell?  DESIGN.md §Arch-applicability."""
     if shape.name == "long_500k" and not cfg.uses_subquadratic_attention:
         return False, "long_500k skipped: pure full-attention arch (quadratic)"
+    if shape.kind == "serve_prefill":
+        # mirror Model.supports_fused_prefill + the rolling-cache gate
+        if cfg.is_encoder_decoder or cfg.n_vision_tokens:
+            return False, "serve_prefill skipped: side inputs (enc-dec/vlm)"
+        if cfg.family == "moe":
+            return False, "serve_prefill skipped: MoE capacity is batch-shaped"
+        if cfg.sliding_window:
+            return False, "serve_prefill skipped: rolling sliding-window cache"
     return True, ""
 
 

@@ -11,7 +11,10 @@ module provides:
 
 Decode cells lower ``serve_step`` (one new token against a seq_len KV
 cache); ``long_500k`` additionally shards the cache sequence dim over
-every mesh axis (context parallelism, DESIGN §3).
+every mesh axis (context parallelism, DESIGN §3).  The serving-engine
+hot paths lower as their own cells: ``serve_prefill_*`` (fused chunked
+prefill, ``Model.prefill_chunk``) and ``serve_ragged_*`` (vectorized
+per-row-position decode — the engine's one-dispatch-per-tick step).
 """
 
 from __future__ import annotations
@@ -33,6 +36,10 @@ from repro.sharding.logical import axis_rules, train_rules
 from repro.sharding.rules import ShardingPolicy, bytes_per_device, choose_policy, param_specs
 from repro.train.optimizer import AdamWConfig, Schedule, init_opt_state, opt_state_specs
 from repro.train.steps import TrainStepConfig, make_train_step
+
+
+# tokens ingested per row per serve_prefill dispatch (chunked prefill)
+SERVE_PREFILL_CHUNK = 512
 
 
 @dataclass
@@ -315,7 +322,38 @@ def build_cell(
             in_shardings += (NamedSharding(mesh, b_specs["patches"]),)
         step = _wrap_prefill(model, cfg)
         donate = ()
-    else:  # decode
+    elif shape.kind == "serve_prefill":
+        # fused chunked prefill: the serving engine's prompt-ingestion
+        # dispatch (SERVE_PREFILL_CHUNK tokens per row per call) writing
+        # the decode cache in one shot
+        rules = decode_cell_rules(mesh, shape)
+        mb = 1
+        b = shape.global_batch
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(b, shape.seq_len, dtype=jnp.bfloat16)
+        )
+        c_specs = cache_specs(cfg, cache_shape, rules, mesh)
+        c_shard = _spec_tree_to_shardings(c_specs, mesh)
+
+        def step(params, cache, tokens, offsets, lengths):
+            return model.prefill_chunk(params, cache, tokens, offsets, lengths)
+
+        args = (
+            params_shape,
+            cache_shape,
+            jax.ShapeDtypeStruct((b, SERVE_PREFILL_CHUNK), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),  # per-row start offsets
+            jax.ShapeDtypeStruct((b,), jnp.int32),  # per-row valid lengths
+        )
+        in_shardings = (
+            p_shard,
+            c_shard,
+            NamedSharding(mesh, P(None, None)),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+        )
+        donate = (1,)
+    else:  # decode / serve_decode
         rules = decode_cell_rules(mesh, shape)
         mb = 1
         b = shape.global_batch
@@ -329,11 +367,17 @@ def build_cell(
         def step(params, cache, tokens, pos):
             return model.decode_step(params, cache, tokens, pos)
 
+        if shape.kind == "serve_decode":
+            # ragged continuous batching: per-row position vector [B] —
+            # every slot advances in ONE dispatch regardless of depth mix
+            pos_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
+        else:
+            pos_struct = jax.ShapeDtypeStruct((), jnp.int32)  # uniform (serving cells)
         args = (
             params_shape,
             cache_shape,
             jax.ShapeDtypeStruct((b, 1), jnp.int32),
-            jax.ShapeDtypeStruct((), jnp.int32),  # uniform position (serving)
+            pos_struct,
         )
         in_shardings = (
             p_shard,

@@ -38,6 +38,9 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
         params,
         max_batch=int(job.get("max_batch", 4)),
         max_len=int(job.get("max_len", 128)),
+        prefill_chunk=int(job.get("prefill_chunk", 16)),
+        dispatch_mode=str(job.get("dispatch_mode", "fused")),
+        sample_on_device=bool(job.get("sample_on_device", True)),
         heartbeat=lambda: ctx.heartbeat(),
     )
     engine.submit(
@@ -52,6 +55,13 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
         r.uid: {"prompt": r.prompt, "completion": r.output} for r in finished
     }
     out = job.get("output_prefix", "serve/batch0")
-    ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results,
-                                               "engine_steps": engine.steps_executed})
-    return {"n_requests": len(finished), "engine_steps": engine.steps_executed}
+    dispatch_stats = {
+        "engine_steps": engine.steps_executed,
+        "decode_dispatches": engine.decode_dispatches,
+        "prefill_dispatches": engine.prefill_dispatches,
+        "dispatches": engine.dispatches,
+        "tokens_emitted": engine.tokens_emitted,
+        "prompt_tokens_ingested": engine.prompt_tokens_ingested,
+    }
+    ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **dispatch_stats})
+    return {"n_requests": len(finished), **dispatch_stats}

@@ -105,6 +105,62 @@ def mla_decode_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict[s
     }
 
 
+def apply_mla_extend(
+    p: Params,
+    x: jax.Array,  # (b, T, d) chunk of new tokens
+    cache: Dict[str, jax.Array],
+    positions: jax.Array,  # (b, T) absolute cache positions of the chunk
+    cfg: ArchConfig,
+    *,
+    valid: Optional[jax.Array] = None,  # (b, T) real (non-padded) tokens
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked-prefill MLA: T new tokens per row against the compressed
+    cache in one shot (absorbed form, same math as ``apply_mla_decode``).
+
+    Right-padded tokens (``valid`` False) have their writes redirected
+    out of bounds, where JAX drops them — the cache only ever receives
+    real tokens, and the ``slot <= q_pos`` mask supplies causality.
+    """
+    b, T, _ = x.shape
+    h, qk, qr, vd, r = (
+        cfg.n_heads,
+        cfg.nope_head_dim,
+        cfg.rope_head_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    q_nope, q_rope = _project_q(p, x, cfg, positions)  # (b,T,h,*)
+    c_new, kr_new = _compress_kv(p, x, cfg, positions)  # (b,T,r), (b,T,qr)
+
+    rows = jnp.arange(b)[:, None]
+    t_cache = cache["c_kv"].shape[1]
+    write = positions
+    if valid is not None:
+        write = jnp.where(valid, write, t_cache)  # out of bounds -> dropped
+    c_kv = cache["c_kv"].at[rows, write].set(c_new.astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[rows, write].set(kr_new.astype(cache["k_rope"].dtype))
+    c_kv = shard(c_kv, "cache_batch", "kv_seq", None)
+    k_rope = shard(k_rope, "cache_batch", "kv_seq", None)
+
+    k_up = p["k_up"].reshape(r, h, qk)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, k_up)
+
+    scale = 1.0 / math.sqrt(qk + qr)
+    t = c_kv.shape[1]
+    logits = (
+        jnp.einsum("bqhr,btr->bhqt", q_lat, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,btd->bhqt", q_rope, k_rope, preferred_element_type=jnp.float32)
+    ) * scale
+    mask = jnp.arange(t)[None, None, None, :] <= positions[:, None, :, None]  # (b,1,T,t)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+
+    ctx = jnp.einsum("bhqt,btr->bqhr", probs, c_kv)
+    v_up = p["v_up"].reshape(r, h, vd)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, v_up).reshape(b, T, h * vd)
+    return shard(out @ p["wo"], "batch", "seq", "embed"), {"c_kv": c_kv, "k_rope": k_rope}
+
+
 def apply_mla_decode(
     p: Params,
     x: jax.Array,  # (b, 1, d)

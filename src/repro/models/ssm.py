@@ -230,6 +230,75 @@ def _conv_step(state_win: jax.Array, xt: jax.Array, w: jax.Array, b: jax.Array):
     return out, window[:, 1:, :]
 
 
+def _conv_extend(
+    win: jax.Array,  # (b, k-1, c) raw inputs preceding the chunk
+    raw: jax.Array,  # (b, T, c) raw chunk inputs (right-padded)
+    w: jax.Array,
+    b: jax.Array,
+    lengths: jax.Array,  # (b,) valid tokens per row
+) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over a chunk with the cached window as left
+    context; returns (silu outputs (b,T,c), new window ending at each
+    row's last VALID token)."""
+    k = w.shape[0]
+    T = raw.shape[1]
+    full = jnp.concatenate([win.astype(raw.dtype), raw], axis=1)  # (b, k-1+T, c)
+    acc = jnp.zeros(raw.shape, jnp.float32)
+    for i in range(k):
+        acc = acc + full[:, i : i + T, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = jax.nn.silu(acc + b.astype(jnp.float32)).astype(raw.dtype)
+    # window after ingesting `lengths` tokens = full[lengths : lengths+k-1]
+    # (lengths == 0 reproduces the old window unchanged)
+    idx = lengths[:, None] + jnp.arange(k - 1)[None, :]
+    new_win = jnp.take_along_axis(full, idx[..., None], axis=1)
+    return out, new_win
+
+
+def _ssd_prefill_chunk(T: int, target: int) -> int:
+    """Largest divisor of T that is <= the configured ssd chunk."""
+    for c in range(min(target, T), 0, -1):
+        if T % c == 0:
+            return c
+    return 1
+
+
+def apply_mamba2_prefill(
+    p: Params,
+    x: jax.Array,  # (b, T, d) right-padded chunk
+    state: Dict[str, jax.Array],
+    cfg: ArchConfig,
+    *,
+    valid: jax.Array,  # (b, T) bool mask of real tokens
+    lengths: jax.Array,  # (b,) = valid.sum(1), passed in to stay traceable
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked prefill: ingest each row's valid tokens through the SSD scan
+    starting from `state` in ONE call, returning outputs for the whole
+    chunk and the per-row recurrent state positioned after the last valid
+    token.  Padded positions are neutralized by zeroing dt (decay = 1,
+    update = 0) — the causal conv never leaks padding left-ward, and the
+    padded outputs are simply unused by the caller."""
+    b, T, d = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+
+    z, xi, B, C, dt = _project(p, x)
+    xi, new_cx = _conv_extend(state["conv_x"], xi, p["conv_x"]["w"], p["conv_x"]["b"], lengths)
+    B, new_cb = _conv_extend(state["conv_B"], B, p["conv_B"]["w"], p["conv_B"]["b"], lengths)
+    C, new_cc = _conv_extend(state["conv_C"], C, p["conv_C"]["w"], p["conv_C"]["b"], lengths)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,T,h)
+    dt = dt * valid[..., None].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, T, h, hp)
+
+    chunk = _ssd_prefill_chunk(T, cfg.ssm_chunk)
+    y, final = ssd_chunked(xh, dt, A, B, C, chunk=chunk, initial_state=state["ssm"])
+    y = y + (p["D"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, T, di)
+    y = rmsnorm_gated(p["norm_w"], y, z, cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"conv_x": new_cx, "conv_B": new_cb, "conv_C": new_cc, "ssm": final}
+
+
 def apply_mamba2_decode(
     p: Params,
     x: jax.Array,  # (b, 1, d)

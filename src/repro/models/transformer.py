@@ -180,6 +180,64 @@ def _attn_forward(
     return shard(out @ p["wo"], "batch", "residual_seq", "embed")
 
 
+def _attn_extend(
+    p: Params,
+    x: jax.Array,  # (b,T,d)
+    cache_k: jax.Array,  # (b,t,hkv,hd)
+    cache_v: jax.Array,
+    positions: jax.Array,  # (b,T) absolute positions of the chunk tokens
+    cfg: ArchConfig,
+    *,
+    n_heads: Optional[int] = None,
+    n_kv: Optional[int] = None,
+    head_dim: Optional[int] = None,
+    use_rope: bool = True,
+    valid: Optional[jax.Array] = None,  # (b,T) real (non-padded) tokens
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill attention: append T tokens per row to the KV cache
+    in one shot and attend each query against the full cache.
+
+    Right-padded tokens (``valid`` False, including whole rows that are
+    not ingesting this dispatch) have their writes redirected out of
+    bounds — JAX drops out-of-bounds scatter updates — so the cache only
+    ever receives real tokens.  Causality then falls out of the
+    ``kv_pos <= q_pos`` position mask.  A rolling sliding-window cache
+    (t < max position) additionally mislabels wrapped slots via the
+    chunk-end reconstruction below, so callers gate those out.
+    """
+    h = n_heads or cfg.n_heads
+    hkv = n_kv or cfg.n_kv_heads
+    hd = head_dim or cfg.resolved_head_dim
+    b, T, _ = x.shape
+    q, k, v = qkv_project(p, x, h, hkv, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    t = cache_k.shape[1]
+    write = jnp.mod(positions, t)  # (b,T)
+    if valid is not None:
+        write = jnp.where(valid, write, t)  # out-of-bounds -> update dropped
+    rows = jnp.arange(b)[:, None]
+    cache_k = cache_k.at[rows, write].set(k.astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, write].set(v.astype(cache_v.dtype))
+    cache_k = shard(cache_k, "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    cache_v = shard(cache_v, "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    # absolute position held by each cache slot, referenced to the chunk end
+    last = positions[:, -1]
+    slots = jnp.arange(t)
+    kv_pos = last[:, None] - jnp.mod(last[:, None] - slots[None, :], t)  # (b,t)
+    kv_mask = kv_pos >= 0
+    out = gqa_attention(
+        q, cache_k, cache_v,
+        q_positions=positions, kv_positions=kv_pos,
+        sliding_window=cfg.sliding_window, kv_mask=kv_mask,
+        logit_softcap=cfg.attn_logit_softcap,
+    )
+    out = out.reshape(b, T, h * hd)
+    out = shard(out, "act_batch", "seq", "act_heads")
+    return shard(out @ p["wo"], "batch", "seq", "embed"), cache_k, cache_v
+
+
 def _attn_decode(
     p: Params,
     x: jax.Array,  # (b,1,d)
@@ -335,6 +393,7 @@ def _shared_block_apply(
     positions: jax.Array,
     cache: Optional[Tuple[jax.Array, jax.Array]] = None,
     pos: Optional[jax.Array] = None,
+    valid: Optional[jax.Array] = None,
 ):
     """Returns delta to add to h (and updated kv cache when decoding)."""
     d2h = jnp.concatenate([h, x0], axis=-1)
@@ -351,10 +410,17 @@ def _shared_block_apply(
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
         )
         new_cache = None
-    else:
+    elif pos is not None:
         a, ck, cv = _attn_decode(
             attn_p, xn, cache[0], cache[1], pos, cfg,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+        )
+        new_cache = (ck, cv)
+    else:
+        # chunked prefill: T tokens per row against the shared-block cache
+        a, ck, cv = _attn_extend(
+            attn_p, xn, cache[0], cache[1], positions, cfg,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd, valid=valid,
         )
         new_cache = (ck, cv)
     y = d2h + a
@@ -812,6 +878,169 @@ class Model:
         the same computation on TPU; the dry-run lowers this step)."""
         logits = self.forward(params, tokens, frames=frames, patches=patches)
         return logits[:, -1:]
+
+    # ------------------------------------------------- fused chunked prefill
+    @property
+    def supports_fused_prefill(self) -> bool:
+        """Can ``prefill_chunk`` ingest this architecture's prompts?
+
+        Encoder-decoder / VLM need side inputs the serving cache does not
+        carry, and MoE expert capacity is batch-shaped (right-padded chunk
+        tokens would displace real tokens from experts, breaking parity
+        with the token-at-a-time path)."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder or cfg.n_vision_tokens:
+            return False
+        if cfg.family == "moe":
+            return False
+        return True
+
+    def prefill_chunk(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jax.Array,  # (B, T) right-padded prompt chunks
+        offsets: jax.Array,  # (B,) cache position of each row's first token
+        lengths: jax.Array,  # (B,) valid tokens per row; 0 = inactive row
+    ) -> Tuple[jax.Array, Params]:
+        """Ingest whole prompt chunks into the decode cache in ONE dispatch.
+
+        Row ``b`` writes ``tokens[b, :lengths[b]]`` at cache positions
+        ``offsets[b] .. offsets[b]+lengths[b]-1`` and returns the logits of
+        its last valid token (``(B, padded_vocab)``) plus the updated cache
+        — exactly what token-at-a-time decode ingestion would have produced,
+        at chunk-size tokens per dispatch instead of one.
+        """
+        cfg = self.cfg
+        if not self.supports_fused_prefill:
+            raise NotImplementedError(
+                f"fused prefill unsupported for arch family {cfg.family!r} "
+                "(enc-dec / vlm / moe)"
+            )
+        b, T = tokens.shape
+        offsets = jnp.asarray(offsets, jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        positions = offsets[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+        valid = jnp.arange(T, dtype=jnp.int32)[None, :] < lengths[:, None]
+        x = params["embed"][tokens]
+        if cfg.max_position_embeddings:
+            x = x + params["pos"][jnp.clip(positions, 0, cfg.max_position_embeddings - 1)]
+        x = x.astype(self.rt.dtype)
+        if cfg.family in ("ssm", "hybrid"):
+            h, new_cache = self._prefill_ssm(params, cache, x, positions, lengths, valid)
+        elif cfg.use_mla:
+            h, new_cache = self._prefill_mla(params, cache, x, positions, valid)
+        else:
+            h, new_cache = self._prefill_attn(params, cache, x, positions, valid)
+        # gather each row's last valid hidden state BEFORE the vocab matmul
+        # so the dispatch never materializes (B, T, vocab) logits
+        last = jnp.clip(lengths - 1, 0, T - 1)
+        h_last = h[jnp.arange(b), last][:, None]  # (b,1,d)
+        return self._logits(params, h_last)[:, 0], new_cache
+
+    def _prefill_attn(self, params, cache, x, positions, valid):
+        cfg, rt = self.cfg, self.rt
+
+        def body_fn(h, xs):
+            layer_p, ck, cv = xs
+            hn = apply_norm(layer_p["ln1"], h, cfg.norm, cfg.norm_eps)
+            a, ck, cv = _attn_extend(
+                layer_p["attn"], hn, ck, cv, positions, cfg,
+                use_rope=not cfg.max_position_embeddings, valid=valid,
+            )
+            h = h + a
+            hn = apply_norm(layer_p["ln2"], h, cfg.norm, cfg.norm_eps)
+            h = h + apply_mlp(layer_p["mlp"], hn, cfg.activation)
+            return h, (ck, cv)
+
+        h = x
+        new_cache = dict(cache)
+        k_parts, v_parts = [], []
+        offset = 0
+        for group in ("dense_layers", "layers"):
+            if group not in params:
+                continue
+            stacked = params[group]
+            n = _stack_len(stacked)
+            xs = (stacked, cache["k"][offset : offset + n], cache["v"][offset : offset + n])
+            h, (nk, nv) = self._maybe_scan(body_fn, h, xs)
+            k_parts.append(nk)
+            v_parts.append(nv)
+            offset += n
+        new_cache["k"] = jnp.concatenate(k_parts, 0) if len(k_parts) > 1 else k_parts[0]
+        new_cache["v"] = jnp.concatenate(v_parts, 0) if len(v_parts) > 1 else v_parts[0]
+        return h, new_cache
+
+    def _prefill_mla(self, params, cache, x, positions, valid):
+        cfg = self.cfg
+
+        def body_fn(h, xs):
+            layer_p, ckv, krope = xs
+            hn = apply_norm(layer_p["ln1"], h, cfg.norm, cfg.norm_eps)
+            a, new_c = mla_mod.apply_mla_extend(
+                layer_p["attn"], hn, {"c_kv": ckv, "k_rope": krope}, positions, cfg,
+                valid=valid,
+            )
+            h = h + a
+            hn = apply_norm(layer_p["ln2"], h, cfg.norm, cfg.norm_eps)
+            h = h + apply_mlp(layer_p["mlp"], hn, cfg.activation)
+            return h, (new_c["c_kv"], new_c["k_rope"])
+
+        h, (nc, nr) = self._maybe_scan(
+            body_fn, x, (params["layers"], cache["c_kv"], cache["k_rope"])
+        )
+        new_cache = dict(cache)
+        new_cache["c_kv"] = nc
+        new_cache["k_rope"] = nr
+        return h, new_cache
+
+    def _prefill_ssm(self, params, cache, x, positions, lengths, valid):
+        cfg, rt = self.cfg, self.rt
+
+        def body_fn(h, xs):
+            layer_p, st = xs
+            hn = apply_norm(layer_p["ln1"], h, cfg.norm, cfg.norm_eps)
+            out, new_st = ssm_mod.apply_mamba2_prefill(
+                layer_p["mixer"], hn, st, cfg, valid=valid, lengths=lengths
+            )
+            return h + out, new_st
+
+        h = x
+        new_cache = dict(cache)
+        if cfg.family == "ssm":
+            h, new_state = self._maybe_scan(body_fn, h, (params["layers"], cache["state"]))
+            new_cache["state"] = new_state
+            return h, new_cache
+
+        # hybrid (zamba2): shared attention block between SSM segments
+        every = cfg.shared_attn_every
+        n_inv = cfg.n_layers // every
+        x0 = x
+        state_parts, sk, sv = [], [], []
+        for inv in range(n_inv):
+            delta, (nk, nv) = _shared_block_apply(
+                params["shared"], h, x0, inv, cfg, rt,
+                positions=positions,
+                cache=(cache["shared_k"][inv], cache["shared_v"][inv]),
+                valid=valid,
+            )
+            h = h + delta
+            sk.append(nk[None])
+            sv.append(nv[None])
+            seg_p = jax.tree.map(lambda a: a[inv * every : (inv + 1) * every], params["layers"])
+            seg_s = jax.tree.map(lambda a: a[inv * every : (inv + 1) * every], cache["state"])
+            h, new_st = self._maybe_scan(body_fn, h, (seg_p, seg_s))
+            state_parts.append(new_st)
+        rem = cfg.n_layers - n_inv * every
+        if rem:
+            seg_p = jax.tree.map(lambda a: a[n_inv * every :], params["layers"])
+            seg_s = jax.tree.map(lambda a: a[n_inv * every :], cache["state"])
+            h, new_st = self._maybe_scan(body_fn, h, (seg_p, seg_s))
+            state_parts.append(new_st)
+        new_cache["state"] = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *state_parts)
+        new_cache["shared_k"] = jnp.concatenate(sk, 0)
+        new_cache["shared_v"] = jnp.concatenate(sv, 0)
+        return h, new_cache
 
 
 # ----------------------------------------------------------------- helpers

@@ -1,30 +1,48 @@
-"""Serving engine: continuous batching over the decode step.
+"""Serving engine: continuous batching, fused chunked prefill, and
+single-dispatch vectorized decode.
 
 Slot-based continuous batching (vLLM-style at miniature scale): a fixed
 pool of ``max_batch`` slots, each holding one request's cache position;
 finished slots are refilled from the pending queue every step, so the
-batch stays full under ragged request lengths.  The decode step is the
-same jit'd function the multi-pod dry-run lowers — on TPU the cache and
-weights are sharded by the decode rule set (DESIGN §3: sequence-sharded
-flash-decode).
+batch stays full under ragged request lengths.
 
-Prompt ingestion uses the decode path token-by-token (exactly correct,
-cache-consistent).  Fused parallel prefill is lowered/validated by the
-dry-run (`serve_prefill`); fusing its cache write into this engine is a
-documented TODO that does not change the API.
+Hot-path structure (this is the whole point — throughput limited by the
+hardware, not by dispatch count):
+
+- **decode**: ONE jitted dispatch per tick for any mix of slot positions.
+  ``Model.decode_step`` takes a per-row position vector ``[B]``, so rows
+  at different depths advance together; the seed engine's one-dispatch-
+  per-distinct-position loop (up to B sequential device calls per token)
+  is retained only as ``dispatch_mode="grouped"`` for benchmarking.
+- **prefill**: prompts are ingested through ``Model.prefill_chunk`` in
+  ``prefill_chunk``-token slices — the KV/SSM cache for a whole chunk is
+  written in one dispatch instead of token-at-a-time through the decode
+  path.  Architectures without fused-prefill support (enc-dec, VLM, MoE
+  capacity routing, rolling sliding-window caches) fall back to decode-
+  path ingestion, still at one dispatch per tick.
+- **sampling**: greedy/temperature sampling runs on-device inside the
+  same dispatch (``repro.serving.sampling``); only ``B`` token ids cross
+  the host boundary per tick instead of ``(B, vocab)`` logits.
+  ``sample_on_device=False`` restores the host path (now numerically
+  stable: max-subtracted softmax).
+
+Dispatch accounting: ``decode_dispatches`` / ``prefill_dispatches`` /
+``dispatches`` (their sum) and ``tokens_emitted`` /
+``prompt_tokens_ingested`` feed ``benchmarks/bench_serving.py``'s
+dispatches-per-token metric.  ``steps_executed`` keeps its seed meaning
+(number of jitted decode calls).
 """
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.serving.sampling import make_decode_step, make_prefill_step
 
 
 @dataclass
@@ -36,6 +54,9 @@ class Request:
     # filled by the engine
     output: List[int] = field(default_factory=list)
     done: bool = False
+    # per-request sampling stream id (assigned at submit; scheduling- and
+    # slot-independent so fused and grouped modes draw identical samples)
+    sample_stream: int = field(default=0, compare=False, repr=False)
 
 
 @dataclass
@@ -55,37 +76,83 @@ class ServeEngine:
         max_len: int = 256,
         rng_seed: int = 0,
         heartbeat: Callable[[], None] = lambda: None,
+        prefill_chunk: int = 16,
+        dispatch_mode: str = "fused",
+        sample_on_device: bool = True,
     ):
+        if dispatch_mode not in ("fused", "grouped"):
+            raise ValueError(f"dispatch_mode must be fused|grouped, got {dispatch_mode!r}")
+        if dispatch_mode == "grouped" and model.cfg.family in ("ssm", "hybrid"):
+            # per-group re-dispatch re-advances recurrent state every extra
+            # call per tick (KV writes are idempotent, recurrences are not):
+            # grouped output would be silently wrong, so refuse up front
+            raise ValueError(
+                "dispatch_mode='grouped' corrupts recurrent SSM/hybrid state; "
+                "use the fused engine for family "
+                f"{model.cfg.family!r}"
+            )
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.heartbeat = heartbeat
+        self.prefill_chunk = int(prefill_chunk)
+        self.dispatch_mode = dispatch_mode
+        self.sample_on_device = sample_on_device
         self.cache = model.init_cache(max_batch, max_len)
         self.slots = [_Slot() for _ in range(max_batch)]
         self.pending: List[Request] = []
         self.finished: List[Request] = []
         self.rng = np.random.default_rng(rng_seed)
-        self._step = jax.jit(model.decode_step)
-        self.steps_executed = 0
+        self._n_submitted = 0
+        self._decode = jax.jit(make_decode_step(model, rng_seed, sample_on_device))
+        self._use_prefill = (
+            dispatch_mode == "fused"
+            and self.prefill_chunk > 0
+            and model.supports_fused_prefill
+            and not self._cache_is_rolling()
+        )
+        self._prefill = (
+            jax.jit(make_prefill_step(model, rng_seed, sample_on_device))
+            if self._use_prefill
+            else None
+        )
+        # dispatch accounting
+        self.steps_executed = 0  # jitted decode calls (seed-compatible name)
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+        self.dispatches = 0
+        self.tokens_emitted = 0
+        self.prompt_tokens_ingested = 0
+
+    def _cache_is_rolling(self) -> bool:
+        """Sliding-window KV caches wrap writes mod t; right-padded prefill
+        chunks could then alias still-visible slots — decode-path ingest."""
+        k = self.cache.get("k") if isinstance(self.cache, dict) else None
+        return k is not None and k.shape[2] < self.max_len
 
     # ------------------------------------------------------------- intake
     def submit(self, reqs: List[Request]) -> None:
+        for r in reqs:
+            r.sample_stream = self._n_submitted
+            self._n_submitted += 1
         self.pending.extend(reqs)
 
     def _refill(self) -> None:
-        for slot in self.slots:
+        for row, slot in enumerate(self.slots):
             if slot.req is None and self.pending:
                 req = self.pending.pop(0)
                 slot.req = req
                 slot.pos = 0
                 slot.remaining_prompt = list(req.prompt)
-                # NOTE: each slot owns a batch row; row state for a new
-                # request starts fresh because positions restart at 0 and
-                # attention masks by position.  SSM rows are reset below.
-                self._reset_row(self.slots.index(slot))
+                # row identity comes from ENUMERATION — _Slot is a value-
+                # comparing dataclass, so slots.index(slot) can return a
+                # different-but-equal slot and zero the wrong row
+                self._reset_row(row)
 
     def _reset_row(self, row: int) -> None:
+        import jax.numpy as jnp
+
         def zero_row(x):
             if x.ndim >= 2 and x.shape[1] == self.max_batch:
                 return x.at[:, row].set(jnp.zeros_like(x[:, row]))
@@ -95,62 +162,192 @@ class ServeEngine:
 
     # ------------------------------------------------------------- stepping
     def step(self) -> int:
-        """One engine tick: every active slot consumes/produces one token."""
+        """One engine tick.
+
+        Fused mode: pending prompt chunks are ingested first (>= chunk-size
+        tokens per prefill dispatch), then every generating slot advances
+        one token in a SINGLE decode dispatch regardless of position mix.
+        Grouped mode reproduces the seed's per-position-group dispatching
+        (with its cross-row KV corruption fixed) for comparison.  NOTE:
+        grouped dispatching is inherently wrong for recurrent (SSM /
+        hybrid) state — every extra per-tick dispatch re-advances all
+        rows' recurrences (KV writes are idempotent, recurrences are
+        not).  That unfixable property is part of why the fused path
+        exists; use grouped mode only on attention-family models.
+        """
         self._refill()
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not active:
+        if not any(s.req is not None for s in self.slots):
             return 0
-        tokens = np.zeros((self.max_batch, 1), np.int32)
+        emitted = 0
+        if self._use_prefill:
+            emitted += self._ingest_prompts()
+        if self.dispatch_mode == "grouped":
+            emitted += self._decode_tick_grouped()
+        else:
+            emitted += self._decode_tick_fused()
+        return emitted
+
+    # -- prompt ingestion (fused chunked prefill) ---------------------------
+    def _ingest_prompts(self) -> int:
+        emitted = 0
+        B, C = self.max_batch, self.prefill_chunk
+        while True:
+            rows = [
+                i for i, s in enumerate(self.slots) if s.req is not None and s.remaining_prompt
+            ]
+            if not rows:
+                return emitted
+            tokens = np.zeros((B, C), np.int32)
+            offsets = np.zeros((B,), np.int32)
+            lengths = np.zeros((B,), np.int32)
+            temps = np.zeros((B,), np.float32)
+            streams = np.zeros((B,), np.int32)
+            steps = np.zeros((B,), np.int32)
+            for i in rows:
+                slot = self.slots[i]
+                n = min(C, len(slot.remaining_prompt))
+                tokens[i, :n] = slot.remaining_prompt[:n]
+                offsets[i] = slot.pos
+                lengths[i] = n
+                temps[i] = slot.req.temperature
+                streams[i] = slot.req.sample_stream
+            if self.sample_on_device:
+                nxt, self.cache = self._prefill(
+                    self.params, self.cache, tokens, offsets, lengths, temps, streams, steps
+                )
+                nxt, lg = np.asarray(nxt), None
+            else:
+                logits, self.cache = self._prefill(
+                    self.params, self.cache, tokens, offsets, lengths
+                )
+                nxt, lg = None, np.asarray(logits)
+            self.prefill_dispatches += 1
+            self.dispatches += 1
+            self.heartbeat()
+            for i in rows:
+                slot = self.slots[i]
+                n = min(C, len(slot.remaining_prompt))
+                del slot.remaining_prompt[:n]
+                slot.pos += n
+                self.prompt_tokens_ingested += n
+                if not slot.remaining_prompt:
+                    # the chunk's last-token logits seed generation
+                    tok = (
+                        int(nxt[i])
+                        if nxt is not None
+                        else self._host_sample(lg[i], slot.req.temperature)
+                    )
+                    self._accept_token(i, tok)
+                    emitted += 1
+
+    # -- decode -------------------------------------------------------------
+    def _build_decode_inputs(self):
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        streams = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        active = []
         for i, slot in enumerate(self.slots):
+            # parked rows keep their stale pos: the write is confined to
+            # their own (dead) row, which is zeroed again at refill
+            pos[i] = slot.pos
             if slot.req is None:
                 continue
-            if slot.remaining_prompt:
+            active.append(i)
+            if slot.remaining_prompt:  # decode-path ingestion fallback
                 tokens[i, 0] = slot.remaining_prompt[0]
             elif slot.req.output:
                 tokens[i, 0] = slot.req.output[-1]
             else:
                 tokens[i, 0] = slot.req.prompt[-1]
+            temps[i] = slot.req.temperature
+            streams[i] = slot.req.sample_stream
+            steps[i] = len(slot.req.output)
+        return active, tokens, pos, temps, streams, steps
 
-        # all slots share one position counter per row; rows advance in
-        # lockstep with their own pos — we step at the max and mask
-        # per-row via each row's own position.  Simpler: rows run their own
-        # pos by calling decode per distinct pos group.
+    def _decode_dispatch(
+        self, tokens, pos, temps, streams, steps
+    ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+        if self.sample_on_device:
+            nxt, self.cache = self._decode(
+                self.params, self.cache, tokens, pos, temps, streams, steps
+            )
+            out: Tuple[Optional[np.ndarray], Optional[np.ndarray]] = (np.asarray(nxt), None)
+        else:
+            logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
+            out = (None, np.asarray(logits))
+        self.decode_dispatches += 1
+        self.steps_executed += 1
+        self.dispatches += 1
+        self.heartbeat()
+        return out
+
+    def _advance_rows(self, rows, nxt, lg) -> int:
+        emitted = 0
+        for i in rows:
+            slot = self.slots[i]
+            slot.pos += 1
+            if slot.remaining_prompt:
+                slot.remaining_prompt.pop(0)
+                self.prompt_tokens_ingested += 1
+                if slot.remaining_prompt:
+                    continue  # still ingesting the prompt
+            tok = (
+                int(nxt[i]) if nxt is not None else self._host_sample(lg[i], slot.req.temperature)
+            )
+            self._accept_token(i, tok)
+            emitted += 1
+        return emitted
+
+    def _decode_tick_fused(self) -> int:
+        active, tokens, pos, temps, streams, steps = self._build_decode_inputs()
+        if not active:
+            return 0
+        nxt, lg = self._decode_dispatch(tokens, pos, temps, streams, steps)
+        return self._advance_rows(active, nxt, lg)
+
+    def _decode_tick_grouped(self) -> int:
+        """Seed-style dispatching: one jitted call per distinct slot
+        position.  Every call carries the full per-row position vector, so
+        cache writes are correct and idempotent across the tick's calls
+        (the seed's scalar-pos variant overwrote OTHER rows' histories);
+        only the group's rows consume their call's outputs."""
+        active, tokens, pos, temps, streams, steps = self._build_decode_inputs()
+        if not active:
+            return 0
         groups: Dict[int, List[int]] = {}
         for i in active:
             groups.setdefault(self.slots[i].pos, []).append(i)
-
         emitted = 0
-        for pos, rows in sorted(groups.items()):
-            logits, self.cache = self._step(
-                self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos)
-            )
-            self.steps_executed += 1
-            self.heartbeat()
-            lg = np.asarray(logits[:, 0, : self.model.cfg.vocab_size])
-            for i in rows:
-                slot = self.slots[i]
-                slot.pos += 1
-                if slot.remaining_prompt:
-                    slot.remaining_prompt.pop(0)
-                    if slot.remaining_prompt:
-                        continue  # still ingesting the prompt
-                # sample the next token
-                if slot.req.temperature > 0:
-                    p = np.exp(lg[i] / slot.req.temperature)
-                    p /= p.sum()
-                    nxt = int(self.rng.choice(len(p), p=p))
-                else:
-                    nxt = int(np.argmax(lg[i]))
-                slot.req.output.append(nxt)
-                emitted += 1
-                if (
-                    len(slot.req.output) >= slot.req.max_new_tokens
-                    or slot.pos >= self.max_len - 1
-                ):
-                    slot.req.done = True
-                    self.finished.append(slot.req)
-                    slot.req = None
+        for _, rows in sorted(groups.items()):
+            nxt, lg = self._decode_dispatch(tokens, pos, temps, streams, steps)
+            emitted += self._advance_rows(rows, nxt, lg)
         return emitted
+
+    # -- bookkeeping ---------------------------------------------------------
+    def _accept_token(self, row: int, tok: int) -> None:
+        slot = self.slots[row]
+        slot.req.output.append(tok)
+        self.tokens_emitted += 1
+        if len(slot.req.output) >= slot.req.max_new_tokens or slot.pos >= self.max_len - 1:
+            slot.req.done = True
+            self.finished.append(slot.req)
+            slot.req = None
+            slot.remaining_prompt = []
+
+    def _host_sample(self, lg_row: np.ndarray, temperature: float) -> int:
+        """Host fallback sampler (``sample_on_device=False``): greedy or
+        max-subtracted softmax — ``np.exp(lg / T)`` on raw logits overflows
+        for large-magnitude logits."""
+        lg = np.asarray(lg_row, np.float64)
+        if temperature <= 0:
+            return int(np.argmax(lg))
+        z = (lg - lg.max()) / temperature
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
 
     def run_to_completion(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0

@@ -1,0 +1,96 @@
+"""On-device token sampling for the serving engine.
+
+The seed engine round-tripped full ``(B, vocab)`` logits to host every
+token and sampled with numpy.  Here sampling is fused into the same
+jitted dispatch as the decode/prefill step, so only ``B`` int32 token
+ids cross the host boundary per tick.
+
+Determinism contract: each request owns a sampling *stream* (an integer
+assigned at submit time) and each emitted token an integer *step* (the
+number of tokens already generated for that request).  The per-token key
+is ``fold_in(fold_in(PRNGKey(base_seed), stream), step)`` — independent
+of batch placement, slot assignment, and dispatch scheduling, so the
+fused single-dispatch engine and the legacy per-position-group engine
+draw token-for-token identical samples.
+
+Temperature sampling uses the Gumbel-max trick on max-subtracted logits:
+``argmax((logits - max(logits)) / T + gumbel)`` is an exact draw from
+``softmax(logits / T)`` and never exponentiates raw logits (the seed's
+host sampler overflowed ``np.exp(logits / T)`` for large logits).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(
+    logits: jax.Array,  # (B, V) unnormalized
+    temps: jax.Array,  # (B,) 0 = greedy
+    streams: jax.Array,  # (B,) per-request sampling stream ids
+    steps: jax.Array,  # (B,) tokens already generated per request
+    *,
+    base_seed: int,
+) -> jax.Array:
+    """Sample one token per row; greedy rows take a plain argmax."""
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    def row_key(stream, step):
+        key = jax.random.PRNGKey(base_seed)
+        return jax.random.fold_in(jax.random.fold_in(key, stream), step)
+
+    keys = jax.vmap(row_key)(streams, steps)
+    gumbel = jax.vmap(lambda k: jax.random.gumbel(k, lg.shape[-1:], jnp.float32))(keys)
+    safe_t = jnp.where(temps > 0, temps, 1.0).astype(jnp.float32)
+    z = (lg - jnp.max(lg, axis=-1, keepdims=True)) / safe_t[:, None] + gumbel
+    sampled = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+def make_decode_step(model, base_seed: int, on_device: bool) -> Callable:
+    """Build the engine's jit target: vectorized-position decode, with
+    sampling fused on-device (default) or raw logits returned for the
+    host-sampling fallback."""
+    vocab = model.cfg.vocab_size
+
+    if not on_device:
+
+        def logits_step(params, cache, tokens, pos):
+            logits, cache = model.decode_step(params, cache, tokens, pos)
+            return logits[:, 0, :vocab], cache
+
+        return logits_step
+
+    def step(params, cache, tokens, pos, temps, streams, steps):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        nxt = sample_tokens(
+            logits[:, 0, :vocab], temps, streams, steps, base_seed=base_seed
+        )
+        return nxt, cache
+
+    return step
+
+
+def make_prefill_step(model, base_seed: int, on_device: bool) -> Callable:
+    """Build the engine's fused chunked-prefill jit target (last-token
+    logits sampled on-device, or returned raw for the host fallback)."""
+    vocab = model.cfg.vocab_size
+
+    if not on_device:
+
+        def logits_step(params, cache, tokens, offsets, lengths):
+            logits, cache = model.prefill_chunk(params, cache, tokens, offsets, lengths)
+            return logits[:, :vocab], cache
+
+        return logits_step
+
+    def step(params, cache, tokens, offsets, lengths, temps, streams, steps):
+        logits, cache = model.prefill_chunk(params, cache, tokens, offsets, lengths)
+        nxt = sample_tokens(logits[:, :vocab], temps, streams, steps, base_seed=base_seed)
+        return nxt, cache
+
+    return step

@@ -111,13 +111,22 @@ def test_applicability_matrix():
             ok, reason = cell_applicable(cfg, shape)
             assert ok or reason
             rows += 1
-    assert rows == 44  # 11 archs x 4 shapes
+    assert rows == 66  # 11 archs x 6 shapes (4 original + 2 serving cells)
 
     assert cell_applicable(get_arch("mamba2-1.3b"), SHAPES["long_500k"])[0]
     assert cell_applicable(get_arch("zamba2-1.2b"), SHAPES["long_500k"])[0]
     assert cell_applicable(get_arch("mixtral-8x7b"), SHAPES["long_500k"])[0]
     assert not cell_applicable(get_arch("nemotron-4-340b"), SHAPES["long_500k"])[0]
     assert not cell_applicable(get_arch("qwen2-72b"), SHAPES["long_500k"])[0]
+
+    # fused serve_prefill gates: MoE / side-input / rolling-window archs
+    # fall back to decode-path ingestion (still 1 dispatch per tick)
+    assert cell_applicable(get_arch("qwen2-72b"), SHAPES["serve_prefill_32k"])[0]
+    assert cell_applicable(get_arch("mamba2-1.3b"), SHAPES["serve_prefill_32k"])[0]
+    assert not cell_applicable(get_arch("mixtral-8x7b"), SHAPES["serve_prefill_32k"])[0]
+    assert not cell_applicable(get_arch("whisper-tiny"), SHAPES["serve_prefill_32k"])[0]
+    for arch in ARCHS + ["ds-paper-100m"]:
+        assert cell_applicable(get_arch(arch), SHAPES["serve_ragged_32k"])[0]
 
 
 def test_param_counts_match_published():

@@ -1,0 +1,25 @@
+"""Tier-1 smoke run of the serving benchmark: a regression in the fused
+engine's dispatch count (the tentpole metric) fails fast on CPU."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+import bench_serving
+
+
+def test_bench_serving_smoke_dispatch_reduction(tmp_path):
+    out = os.path.join(tmp_path, "BENCH_serving.json")
+    rc = bench_serving.main(["--smoke", "--out", out])
+    assert rc == 0, "fused engine must dispatch strictly less than grouped"
+    report = json.load(open(out))
+    fused = report["engines"]["fused"]
+    grouped = report["engines"]["grouped"]
+    # acceptance: dispatches/token strictly lower than the seed-style engine
+    assert fused["dispatches_per_token"] < grouped["dispatches_per_token"]
+    assert fused["tokens_per_sec"] > 0 and grouped["tokens_per_sec"] > 0
+    # prompt ingestion is chunked, not token-at-a-time
+    assert fused["prompt_tokens_per_prefill_dispatch"] > 1.0
+    assert grouped["prefill_dispatches"] == 0  # seed-style path has none

@@ -95,6 +95,44 @@ def test_release_does_not_consume_retry_budget(q):
     assert q.delete(m)
 
 
+def test_receive_batch_claims_n_in_one_call(q):
+    ids = q.send_batch([{"i": i} for i in range(7)])
+    assert len(ids) == 7
+    msgs = q.receive_batch(5, visibility_timeout=10.0)
+    assert len(msgs) == 5
+    assert len({m.receipt for m in msgs}) == 5  # distinct receipts
+    # claimed messages are hidden; the rest still visible
+    assert q.counts() == {"visible": 2, "in_flight": 5, "dead": 0}
+    rest = q.receive_batch(5)
+    assert len(rest) == 2  # drains without blocking
+    # FIFO-ish: every message delivered exactly once across the two claims
+    assert sorted(m.body["i"] for m in msgs + rest) == list(range(7))
+    assert q.delete_batch(msgs + rest) == 7
+    assert q.counts() == {"visible": 0, "in_flight": 0, "dead": 0}
+
+
+def test_receive_batch_skips_poison_to_dlq(q):
+    q.send({"poison": True})
+    q.clk.advance(0.1)  # later enqueued_at: deterministic claim order
+    q.send({"ok": True})
+    for _ in range(3):  # burn the poison message's retry budget
+        m = q.receive_batch(1, visibility_timeout=1.0)[0]
+        assert m.body == {"poison": True}
+        q.clk.advance(1.1)
+    msgs = q.receive_batch(10)
+    assert [m.body for m in msgs] == [{"ok": True}], "poison must be DLQ'd in-claim"
+    assert q.counts()["dead"] == 1
+
+
+def test_delete_batch_ignores_stale_receipts(q):
+    q.send_batch([{"i": i} for i in range(2)])
+    msgs = q.receive_batch(2, visibility_timeout=5.0)
+    q.clk.advance(6.0)  # leases expire; receipts go stale
+    fresh = q.receive_batch(2)
+    assert q.delete_batch(msgs) == 0, "stale receipts must not delete"
+    assert q.delete_batch(fresh) == 2
+
+
 def test_durability_across_reopen(tmp_path):
     path = os.path.join(tmp_path, "q.sqlite")
     clk = VirtualClock()
