@@ -1,11 +1,20 @@
 """Serving-engine benchmark: fused single-dispatch engine vs the seed's
-per-position-group engine on a ragged continuous-batching scenario.
+per-position-group engine, plus the paged-KV-cache engine, on a ragged
+continuous-batching scenario.
 
 The scenario is deliberately hostile to per-group dispatching: mixed
 prompt lengths and more requests than slots, so mid-stream refills keep
 the batch ragged and the seed engine degenerates toward one jitted call
 per occupied slot per token.  The fused engine issues exactly one decode
 dispatch per tick and ingests prompts in ``prefill_chunk``-token slices.
+
+The ``paged`` engine is the fused engine with ``cache_mode="paged"`` and
+a page pool sized to the workload's *actual* demand instead of the dense
+``max_batch x max_len`` worst case; it reports ``peak_cache_bytes`` /
+``pages_in_use_peak`` next to dispatches/token, and the run fails if the
+paged peak is not strictly below the dense reservation (tokens/sec must
+also stay within 10% of the dense fused engine in full runs — wall-clock
+is too noisy to gate in ``--smoke``).
 
 Reports tokens/sec and dispatches/token per engine to
 ``BENCH_serving.json``::
@@ -15,7 +24,8 @@ Reports tokens/sec and dispatches/token per engine to
 
 Smoke mode shrinks the workload to seconds on CPU but keeps the ragged
 structure, so a regression in dispatch count (the metric the tentpole
-optimizes) fails fast without waiting on wall-clock noise.
+optimizes) or in paged-cache accounting fails fast without waiting on
+wall-clock noise.
 """
 
 from __future__ import annotations
@@ -57,13 +67,17 @@ _COUNTERS = (
 
 
 def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
-               prefill_chunk: int) -> dict:
+               prefill_chunk: int, page_size: int = 0, total_pages: int = 0) -> dict:
     from repro.serving.engine import Request, ServeEngine
 
+    paged = mode == "paged"
     engine = ServeEngine(
         model, params,
         max_batch=max_batch, max_len=max_len,
-        prefill_chunk=prefill_chunk, dispatch_mode=mode,
+        prefill_chunk=prefill_chunk,
+        dispatch_mode="fused" if paged else mode,
+        cache_mode="paged" if paged else "dense",
+        **(dict(page_size=page_size, total_pages=total_pages) if paged else {}),
     )
     # compile both dispatch paths on a throwaway request OUTSIDE the timed
     # region, then measure the real workload from its very first step —
@@ -74,6 +88,11 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
                            max_new_tokens=2)])
     engine.run_to_completion()
     base = {k: getattr(engine, k) for k in _COUNTERS}
+    if paged:
+        # re-baseline the page stats too: the warmup request's pages are
+        # freed by now, so the measured window starts from live usage
+        alloc_base = engine.page_allocs
+        engine.peak_pages = engine.pages_in_use
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -81,8 +100,8 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
     wall = time.perf_counter() - t0
     c = {k: getattr(engine, k) - base[k] for k in _COUNTERS}
     total_tokens = c["tokens_emitted"] + c["prompt_tokens_ingested"]
-    return {
-        "dispatch_mode": mode,
+    out = {
+        "dispatch_mode": engine.dispatch_mode,  # paged runs the fused path
         "wall_s": round(wall, 3),
         **c,
         "tokens_per_sec": round(c["tokens_emitted"] / max(wall, 1e-9), 1),
@@ -91,6 +110,19 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
             c["prompt_tokens_ingested"] / max(c["prefill_dispatches"], 1), 2
         ),
     }
+    if paged:
+        out.update(
+            cache_mode="paged",
+            page_size=engine.page_size,
+            total_pages=engine.n_pages,
+            pages_in_use_peak=engine.peak_pages,
+            page_allocs=engine.page_allocs - alloc_base,
+            peak_cache_bytes=engine.peak_cache_bytes,
+            dense_cache_bytes=engine.dense_cache_bytes,
+        )
+    else:
+        out.update(cache_mode="dense", peak_cache_bytes=engine.peak_cache_bytes)
+    return out
 
 
 def main(argv=None) -> int:
@@ -116,18 +148,41 @@ def main(argv=None) -> int:
     model = Model(cfg, ModelRuntime())
     params = model.init(jax.random.PRNGKey(0))
 
+    # page pool sized to the workload's actual demand: longest request
+    # (prompt + generated tokens) rounded up to whole pages, per slot —
+    # strictly below the dense max_len reservation
+    page_size = 16
+    longest = max(len(r.prompt) + r.max_new_tokens
+                  for r in ragged_requests(n_requests, max_new))
+    pages_per_req = -(-longest // page_size)
+    total_pages = max_batch * pages_per_req
+
+    modes = ["grouped", "fused"]
+    if model.supports_paged_cache:
+        modes.append("paged")
+    else:
+        print(f"[bench_serving] paged     skipped: arch {args.arch!r} has no "
+              "pageable KV cache (rolling window / recurrent state / enc-dec)")
+
     results = {}
-    for mode in ("grouped", "fused"):
+    for mode in modes:
         reqs = ragged_requests(n_requests, max_new)
         results[mode] = run_engine(
             model, params, reqs, mode=mode,
             max_batch=max_batch, max_len=max_len, prefill_chunk=prefill_chunk,
+            page_size=page_size, total_pages=total_pages,
         )
         r = results[mode]
+        extra = ""
+        if mode == "paged":
+            extra = (f" peak_cache={r['peak_cache_bytes'] / 1024:.0f}KiB"
+                     f"/{r['dense_cache_bytes'] / 1024:.0f}KiB dense"
+                     f" pages={r['pages_in_use_peak']}/{r['total_pages']}")
         print(
             f"[bench_serving] {mode:8s} tokens/s={r['tokens_per_sec']:8.1f} "
             f"dispatches/token={r['dispatches_per_token']:.4f} "
             f"(decode={r['decode_dispatches']} prefill={r['prefill_dispatches']})"
+            + extra
         )
 
     report = {
@@ -137,6 +192,7 @@ def main(argv=None) -> int:
             "n_requests": n_requests, "max_new_tokens": max_new,
             "max_batch": max_batch, "max_len": max_len,
             "prefill_chunk": prefill_chunk,
+            "page_size": page_size, "total_pages": total_pages,
         },
         "engines": results,
         "dispatch_reduction": round(
@@ -145,15 +201,45 @@ def main(argv=None) -> int:
             2,
         ),
     }
+    paged_speed = 1.0
+    if "paged" in results:
+        paged_speed = (results["paged"]["tokens_per_sec"]
+                       / max(results["fused"]["tokens_per_sec"], 1e-9))
+        report["paged_cache_reduction"] = round(
+            results["paged"]["dense_cache_bytes"]
+            / max(results["paged"]["peak_cache_bytes"], 1), 2
+        )
+        report["paged_tokens_per_sec_vs_fused"] = round(paged_speed, 3)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"[bench_serving] wrote {args.out} "
-          f"(dispatch reduction {report['dispatch_reduction']}x)")
+          f"(dispatch reduction {report['dispatch_reduction']}x"
+          + (f", paged cache reduction {report['paged_cache_reduction']}x, "
+             f"paged speed {paged_speed:.2f}x fused" if "paged" in results else "")
+          + ")")
 
     # the whole point of the fused engine: strictly fewer dispatches/token
     if results["fused"]["dispatches_per_token"] >= results["grouped"]["dispatches_per_token"]:
         print("[bench_serving] REGRESSION: fused engine not below grouped dispatch rate")
         return 1
+    if "paged" in results:
+        # and of the paged cache: peak bytes strictly below the dense reservation
+        if results["paged"]["peak_cache_bytes"] >= results["paged"]["dense_cache_bytes"]:
+            print("[bench_serving] REGRESSION: paged peak not below dense reservation")
+            return 1
+        # parity in output quality: paged must emit the same token counts
+        # on the same dispatch schedule (full per-token output parity is
+        # tests/test_serving_paged.py's job)
+        if (results["paged"]["dispatches_per_token"] != results["fused"]["dispatches_per_token"]
+                or results["paged"]["tokens_emitted"] != results["fused"]["tokens_emitted"]
+                or results["paged"]["dispatches"] != results["fused"]["dispatches"]):
+            print("[bench_serving] REGRESSION: paged schedule/output diverged from fused")
+            return 1
+        # wall-clock gate only outside smoke (CI boxes are too noisy)
+        if not args.smoke and paged_speed < 0.9:
+            print(f"[bench_serving] REGRESSION: paged tokens/sec {paged_speed:.2f}x "
+                  "fused (< 0.9)")
+            return 1
     return 0
 
 

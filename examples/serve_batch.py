@@ -50,6 +50,15 @@ def main() -> int:
                 # issues ONE decode dispatch per tick for any position mix
                 "prefill_chunk": 8,
                 "dispatch_mode": "fused",
+                # paged KV cache: memory scales with resident tokens, not
+                # max_batch * max_len; RESULTS.json gains peak_cache_bytes.
+                # total_pages sizes the pool to actual demand (longest
+                # request = 5 prompt + 6 new = 11 tokens -> 2 pages/slot,
+                # vs the 8-page/slot dense reservation) — without it the
+                # pool silently defaults to dense size
+                "cache_mode": "paged",
+                "page_size": 8,
+                "total_pages": 6,
             },
             groups=batches,
         )
@@ -69,7 +78,9 @@ def main() -> int:
             f"batch{i} dispatches: decode={res['decode_dispatches']} "
             f"prefill={res['prefill_dispatches']} "
             f"dispatches/token={res['dispatches'] / toks:.2f} "
-            f"prompt_tokens_ingested={res['prompt_tokens_ingested']}"
+            f"prompt_tokens_ingested={res['prompt_tokens_ingested']} "
+            f"peak_cache={res['peak_cache_bytes']}B "
+            f"(dense would reserve {res['dense_cache_bytes']}B)"
         )
     return 0
 

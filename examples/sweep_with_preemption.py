@@ -7,6 +7,13 @@ Each job group is an independent learning-rate run of the reduced 100M
 model; the deterministic market seed makes the preemption schedule
 reproducible.
 
+Workers here claim jobs in batches (``SimRunner(prefetch=2)`` drives
+``DurableQueue.receive_batch`` under one lock/transaction instead of a
+round-trip per job); a job buffered on a preempted instance simply
+resurfaces after its visibility timeout — same at-least-once story as a
+crash — and the monitor's teardown sweep batch-acks any straggler that
+reappears between the drain check and queue purge.
+
     PYTHONPATH=src python examples/sweep_with_preemption.py
 """
 
@@ -64,7 +71,9 @@ def main() -> int:
 
     # aggressive preemption: ~3 kills/instance/hour, deterministic seed
     rt.start_cluster(FleetFile(startup_seconds=0.0, preemption_rate_per_hour=3.0, market_seed=13))
-    summary = SimRunner(rt, tick_seconds=120.0).run(max_ticks=500)
+    # prefetch=2: one receive_batch transaction claims two jobs; both are
+    # processed within the 300s visibility lease at 120s ticks
+    summary = SimRunner(rt, tick_seconds=120.0, prefetch=2).run(max_ticks=500)
     print(
         f"sweep complete: done={summary.jobs_done} preemptions={summary.preemptions} "
         f"virtual_time={summary.wall_time / 60:.0f}min"

@@ -230,9 +230,12 @@ SHAPES: Dict[str, ShapeSpec] = {
     "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
     # serving-engine hot paths (chunked prefill writes the decode cache in
     # one dispatch; ragged decode advances per-row positions [B] — the
-    # continuous-batching step ServeEngine issues once per tick)
+    # continuous-batching step ServeEngine issues once per tick;
+    # serve_paged lowers the same ragged decode against the PAGED cache:
+    # a shared page pool half the dense reservation plus a page table)
     "serve_prefill_32k": ShapeSpec("serve_prefill_32k", 32_768, 32, "serve_prefill"),
     "serve_ragged_32k": ShapeSpec("serve_ragged_32k", 32_768, 128, "serve_decode"),
+    "serve_paged_32k": ShapeSpec("serve_paged_32k", 32_768, 128, "serve_paged"),
 }
 
 
@@ -248,6 +251,14 @@ def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
             return False, "serve_prefill skipped: MoE capacity is batch-shaped"
         if cfg.sliding_window:
             return False, "serve_prefill skipped: rolling sliding-window cache"
+    if shape.kind == "serve_paged":
+        # mirror Model.supports_paged_cache
+        if cfg.family in ("ssm", "hybrid"):
+            return False, "serve_paged skipped: O(1) recurrent state, nothing to page"
+        if cfg.is_encoder_decoder:
+            return False, "serve_paged skipped: static enc-dec cross cache"
+        if cfg.sliding_window:
+            return False, "serve_paged skipped: rolling sliding-window cache"
     return True, ""
 
 

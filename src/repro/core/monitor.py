@@ -148,6 +148,25 @@ class Monitor:
         return report
 
     # ------------------------------------------------------------------ teardown
+    def _sweep_queue(self) -> int:
+        """Batched straggler sweep: messages that became visible between
+        the drain check and teardown (e.g. a preempted worker's lease
+        expiring mid-poll) are claimed with ``receive_batch`` and
+        acknowledged with ``delete_batch`` — one transaction per batch
+        instead of a lock + SQL round-trip per message — so their ids are
+        logged before the final purge wipes the tables."""
+        swept = 0
+        while True:
+            batch = self.queue.receive_batch(32)
+            if not batch:
+                break
+            for m in batch:
+                self.logs.put(
+                    "monitor", f"teardown sweep: acked straggler {m.id}"
+                )
+            swept += self.queue.delete_batch(batch)
+        return swept
+
     def _teardown(self) -> None:
         svc_name = f"{self.cfg.app_name}Service"
         if svc_name in self.cluster.services:
@@ -155,7 +174,10 @@ class Monitor:
             self.cluster.deregister_service(svc_name)
         self.fleet.cancel(terminate_instances=True)
         self.cluster.reap_dead_tasks(self.fleet)
-        self.queue.purge()
+        swept = self._sweep_queue()
+        if swept:
+            self.logs.put("monitor", f"teardown sweep acked {swept} stragglers")
+        self.queue.purge()  # in-flight remnants + dead letters
         n = self.logs.export(self.store, f"logs/{self.cfg.app_name}")
         self.logs.put("monitor", f"teardown complete; exported {n} log streams")
         self.finished = True

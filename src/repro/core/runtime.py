@@ -143,7 +143,14 @@ class SimRunner:
     reproducible given the fleet-file seed.
     """
 
-    def __init__(self, rt: DSRuntime, *, tick_seconds: float = 60.0, cheapest: bool = False):
+    def __init__(
+        self,
+        rt: DSRuntime,
+        *,
+        tick_seconds: float = 60.0,
+        cheapest: bool = False,
+        prefetch: int = 1,
+    ):
         if not isinstance(rt.clock, VirtualClock):
             raise TypeError("SimRunner requires a VirtualClock runtime")
         self.rt = rt
@@ -151,6 +158,12 @@ class SimRunner:
         self.monitor = rt.make_monitor(cheapest=cheapest)
         self._workers: Dict[str, Worker] = {}
         self.preemptions = 0
+        # prefetch > 1: workers claim job batches in ONE queue transaction
+        # (DurableQueue.receive_batch) and drain the buffer across ticks.
+        # Keep prefetch * tick_seconds below the visibility timeout or
+        # buffered jobs get re-delivered (at-least-once, so still correct,
+        # just wasteful).
+        self.prefetch = max(1, int(prefetch))
 
     def _worker_for_task(self, task_id: str, instance_id: str) -> Worker:
         if task_id not in self._workers:
@@ -174,6 +187,7 @@ class SimRunner:
                 visibility=self.rt.cfg.sqs_message_visibility,
                 is_terminated=is_terminated,
                 on_heartbeat=on_heartbeat,
+                prefetch=self.prefetch,
             )
         return self._workers[task_id]
 
@@ -229,11 +243,12 @@ class ThreadRunner:
     apply through the shared clock.
     """
 
-    def __init__(self, rt: DSRuntime, *, cheapest: bool = False):
+    def __init__(self, rt: DSRuntime, *, cheapest: bool = False, prefetch: int = 1):
         self.rt = rt
         self.monitor = rt.make_monitor(cheapest=cheapest)
         self.threads: List[threading.Thread] = []
         self.workers: List[Worker] = []
+        self.prefetch = max(1, int(prefetch))
 
     def _spawn(self, tid: str, poll_interval: float) -> None:
         rt = self.rt
@@ -257,6 +272,7 @@ class ThreadRunner:
             visibility=rt.cfg.sqs_message_visibility,
             is_terminated=is_terminated,
             on_heartbeat=on_heartbeat,
+            prefetch=self.prefetch,
         )
         self.workers.append(worker)
         t = threading.Thread(target=worker.run, args=(poll_interval,), daemon=True)

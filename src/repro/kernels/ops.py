@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_decode import paged_flash_attention_folded
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd import ssd_chunk_pallas
 
@@ -48,6 +49,49 @@ def flash_attention(
         interpret=_default_interpret(interpret),
     )
     return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def paged_attention(
+    q: jax.Array,  # (B, T, H, dk) — model layout, RoPE already applied
+    k_pages: jax.Array,  # (n_pages, page_size, Hkv, dk)
+    v_pages: jax.Array,  # (n_pages, page_size, Hkv, dv_store)
+    page_table: jax.Array,  # (B, P) int32; entries >= n_pages = unallocated
+    offsets: jax.Array,  # (B,) absolute position of each row's first token
+    *,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    v_width: int = 0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:  # (B, T, H, dv)
+    """Flash-decode / chunk-extend against a paged KV cache.
+
+    Grouped-query layout: KV heads are NOT repeated; the kernel processes
+    one (row, kv head) pair per grid step with all its query heads folded
+    group-major into the query block.  ``T = 1`` is decode, ``T > 1`` the
+    chunk-extend used by fused prefill.  MLA's absorbed form is the
+    ``Hkv = 1`` case (``v_width`` selects the latent columns of the
+    shared KV page).  Query ``t`` of row ``b`` sits at absolute position
+    ``offsets[b] + t``; the engine's allocate-on-write invariant makes
+    the causal mask exact (see ``flash_decode``).
+    """
+    b, T, h, dk = q.shape
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    qf = q.reshape(b, T, hkv, g, dk).transpose(0, 2, 3, 1, 4).reshape(b, hkv, g * T, dk)
+    out = paged_flash_attention_folded(
+        qf,
+        k_pages,
+        v_pages,
+        page_table,
+        offsets,
+        tokens_per_row=T,
+        scale=scale,
+        softcap=softcap,
+        v_width=v_width,
+        interpret=_default_interpret(interpret),
+    )  # (B, Hkv, G*T, dv)
+    dv = out.shape[-1]
+    return out.reshape(b, hkv, g, T, dv).transpose(0, 3, 1, 2, 4).reshape(b, T, h, dv)
 
 
 def ssd(

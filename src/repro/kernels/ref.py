@@ -33,6 +33,56 @@ def attention_reference(
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention_reference(
+    q: jax.Array,  # (B, T, H, dk)
+    k_pages: jax.Array,  # (n_pages, page_size, Hkv, dk)
+    v_pages: jax.Array,  # (n_pages, page_size, Hkv, dv_store)
+    page_table: jax.Array,  # (B, P) int32; entries >= n_pages = unallocated
+    offsets: jax.Array,  # (B,)
+    *,
+    scale: float = 0.0,
+    softcap: float = 0.0,
+    v_width: int = 0,
+) -> jax.Array:
+    """Gather-then-softmax oracle for the paged flash kernel.
+
+    Dense materialization of exactly what the kernel computes: pages are
+    gathered through the (clamped) page table into a contiguous logical
+    cache, unallocated pages and future positions are masked, and rows
+    with zero attendable positions return zeros (matching the kernel's
+    all-pages-skipped writeback).
+    """
+    n_pages, ps, hkv, dk = k_pages.shape
+    b, T, h, _ = q.shape
+    P = page_table.shape[1]
+    g = h // hkv
+    if not scale:
+        scale = 1.0 / math.sqrt(dk)
+    safe = jnp.minimum(page_table, n_pages - 1)
+    k = k_pages[safe].reshape(b, P * ps, hkv, dk).astype(jnp.float32)
+    v = v_pages[safe].reshape(b, P * ps, hkv, -1).astype(jnp.float32)
+    if v_width:
+        v = v[..., :v_width]
+    qg = q.reshape(b, T, hkv, g, dk).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = offsets[:, None] + jnp.arange(T)[None, :]  # (b, T)
+    kv_pos = jnp.arange(P * ps)[None, :]  # (1, P*ps)
+    alloc = jnp.repeat(page_table < n_pages, ps, axis=1)  # (b, P*ps)
+    mask = jnp.logical_and(
+        kv_pos[:, None] <= q_pos[..., None], alloc[:, None, :]
+    )  # (b, T, P*ps)
+    mask_b = mask[:, None, None]  # (b,1,1,T,t)
+    s = jnp.where(mask_b, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows/queries with nothing attendable: zeros, not a uniform average
+    any_valid = jnp.any(mask_b, axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+    return out.reshape(b, T, h, -1).astype(q.dtype)
+
+
 def ssd_reference(x, dt, A, B, C, chunk):
     """Full chunked-SSD oracle (shared with the model path)."""
     from repro.models.ssm import ssd_chunked

@@ -33,13 +33,25 @@ from repro.configs import get_arch
 from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, cell_applicable
 from repro.models import Model, ModelRuntime
 from repro.sharding.logical import axis_rules, train_rules
-from repro.sharding.rules import ShardingPolicy, bytes_per_device, choose_policy, param_specs
+from repro.sharding.rules import (
+    ShardingPolicy,
+    axis_size,
+    bytes_per_device,
+    choose_policy,
+    param_specs,
+)
 from repro.train.optimizer import AdamWConfig, Schedule, init_opt_state, opt_state_specs
 from repro.train.steps import TrainStepConfig, make_train_step
 
 
 # tokens ingested per row per serve_prefill dispatch (chunked prefill)
 SERVE_PREFILL_CHUNK = 512
+
+# serve_paged cell: page size (MXU-aligned) and pool fraction of the dense
+# reservation — the cell exists to prove the paged decode step lowers with
+# a pool strictly smaller than batch * max_len
+SERVE_PAGE_SIZE = 128
+SERVE_PAGED_POOL_FRACTION = 0.5
 
 
 @dataclass
@@ -76,6 +88,9 @@ def decode_cell_rules(mesh: Mesh, shape: ShapeSpec) -> Dict:
     # flash-decode: cache seq over 'model'; heads/kv-heads must then
     # stay unsharded (a spec may use each mesh axis only once)
     r["kv_seq"] = "model"
+    # paged cache: the page POOL dim shards over 'model' (pages are
+    # unordered, the table indirection restores logical order per row)
+    r["kv_pages"] = "model"
     r["kv_heads"] = None
     r["heads"] = None
     # decode reshards ACTIVATIONS, not weights (§Perf iter 3.2/3.3): the
@@ -179,7 +194,15 @@ def cache_specs(cfg: ArchConfig, cache_shapes, rules, mesh) -> Any:
         #   state.ssm:      (L, B, h, p, n)      (None,batch,ssm_heads,None,None)
         name = path[-1] if path else ""
         logical: Tuple[Optional[str], ...]
-        if name in ("k", "v", "shared_k", "shared_v"):
+        if name in ("k_pages", "v_pages"):
+            #   k_pages/v_pages: (L, n_pages, ps, Hkv, hd)
+            logical = (None, "kv_pages", None, "kv_heads", None)
+        elif name == "kv_pages":
+            #   MLA pool: (L, n_pages, ps, r+qr)
+            logical = (None, "kv_pages", None, None)
+        elif name == "page_table":
+            logical = (None, None)  # tiny, replicated
+        elif name in ("k", "v", "shared_k", "shared_v"):
             logical = (None, "cache_batch", "kv_seq", "kv_heads", None)
         elif name in ("cross_k", "cross_v"):
             logical = (None, "cache_batch", None, "kv_heads", None)
@@ -353,13 +376,28 @@ def build_cell(
             NamedSharding(mesh, P()),
         )
         donate = (1,)
-    else:  # decode / serve_decode
+    else:  # decode / serve_decode / serve_paged
         rules = decode_cell_rules(mesh, shape)
         mb = 1
         b = shape.global_batch
-        cache_shape = jax.eval_shape(
-            lambda: model.init_cache(b, shape.seq_len, dtype=jnp.bfloat16)
-        )
+        if shape.kind == "serve_paged":
+            # paged decode: the cell's whole point is a page pool strictly
+            # smaller than the dense reservation — tokens resident, not
+            # worst case.  The pool dim shards over 'model'; the page
+            # table is scalar freight and stays replicated.
+            pages_per_slot = shape.seq_len // SERVE_PAGE_SIZE
+            n_pages = int(b * pages_per_slot * SERVE_PAGED_POOL_FRACTION)
+            n_pages -= n_pages % axis_size(mesh, "model")
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(
+                    b, shape.seq_len, dtype=jnp.bfloat16,
+                    paged=True, page_size=SERVE_PAGE_SIZE, n_pages=n_pages,
+                )
+            )
+        else:
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(b, shape.seq_len, dtype=jnp.bfloat16)
+            )
         c_specs = cache_specs(cfg, cache_shape, rules, mesh)
         c_shard = _spec_tree_to_shardings(c_specs, mesh)
         tok_spec = P(None, None)  # tokens tiny; activations reshard per rules
@@ -367,7 +405,7 @@ def build_cell(
         def step(params, cache, tokens, pos):
             return model.decode_step(params, cache, tokens, pos)
 
-        if shape.kind == "serve_decode":
+        if shape.kind in ("serve_decode", "serve_paged"):
             # ragged continuous batching: per-row position vector [B] —
             # every slot advances in ONE dispatch regardless of depth mix
             pos_struct = jax.ShapeDtypeStruct((b,), jnp.int32)

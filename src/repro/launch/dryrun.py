@@ -14,12 +14,15 @@ records ``compiled.memory_analysis()`` (does it fit 16 GiB/chip?) and
 ``compiled.cost_analysis()``, and (optionally) runs the roofline probes
 (see repro.roofline.analysis for the methodology).
 
-The serving engine's two hot paths are cells here too and lower with
+The serving engine's hot paths are cells here too and lower with
 ``--all`` (or ``--shape serve_prefill_32k`` / ``--shape
-serve_ragged_32k``): fused chunked prefill (``Model.prefill_chunk``
-writing the sharded decode cache in one dispatch) and ragged
-continuous-batching decode (per-row position vector ``[B]`` — the
-single dispatch ``ServeEngine.step`` issues per tick).
+serve_ragged_32k`` / ``--shape serve_paged_32k``): fused chunked
+prefill (``Model.prefill_chunk`` writing the sharded decode cache in
+one dispatch), ragged continuous-batching decode (per-row position
+vector ``[B]`` — the single dispatch ``ServeEngine.step`` issues per
+tick), and the same ragged decode against the PAGED cache (a shared
+page pool at half the dense reservation, sharded over 'model' on the
+pool dim, plus the replicated per-slot page table).
 
 The two lines at the very top of this file run BEFORE any jax import so
 the host platform exposes 512 placeholder devices; nothing here allocates

@@ -33,6 +33,13 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
 
     prompts = job["prompts"]  # list of token-id lists
     max_new = int(job.get("max_new_tokens", 8))
+    cache_mode = str(job.get("cache_mode", "dense"))
+    paged_kwargs = {}
+    if cache_mode == "paged":
+        paged_kwargs["page_size"] = int(job.get("page_size", 16))
+        if job.get("total_pages"):
+            paged_kwargs["total_pages"] = int(job["total_pages"])
+    stop = job.get("stop_token")
     engine = ServeEngine(
         model,
         params,
@@ -41,12 +48,15 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
         prefill_chunk=int(job.get("prefill_chunk", 16)),
         dispatch_mode=str(job.get("dispatch_mode", "fused")),
         sample_on_device=bool(job.get("sample_on_device", True)),
+        cache_mode=cache_mode,
         heartbeat=lambda: ctx.heartbeat(),
+        **paged_kwargs,
     )
     engine.submit(
         [
             Request(uid=f"req{i}", prompt=[int(t) for t in p], max_new_tokens=max_new,
-                    temperature=float(job.get("temperature", 0.0)))
+                    temperature=float(job.get("temperature", 0.0)),
+                    stop_token=int(stop) if stop is not None else None)
             for i, p in enumerate(prompts)
         ]
     )
@@ -63,5 +73,11 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
         "tokens_emitted": engine.tokens_emitted,
         "prompt_tokens_ingested": engine.prompt_tokens_ingested,
     }
+    if cache_mode == "paged":
+        dispatch_stats.update(
+            pages_in_use_peak=engine.peak_pages,
+            peak_cache_bytes=engine.peak_cache_bytes,
+            dense_cache_bytes=engine.dense_cache_bytes,
+        )
     ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **dispatch_stats})
     return {"n_requests": len(finished), **dispatch_stats}

@@ -161,6 +161,89 @@ def apply_mla_extend(
     return shard(out @ p["wo"], "batch", "seq", "embed"), {"c_kv": c_kv, "k_rope": k_rope}
 
 
+def mla_page_width(cfg: ArchConfig) -> int:
+    """Columns per paged-cache slot: latent ``c_kv`` + shared RoPE key."""
+    return cfg.kv_lora_rank + cfg.rope_head_dim
+
+
+def apply_mla_paged(
+    p: Params,
+    x: jax.Array,  # (b, T, d) — T = 1 is decode, T > 1 chunk-extend
+    kv_pages: jax.Array,  # (n_pages, ps, r + qr) — this layer's page pool
+    page_table: jax.Array,  # (b, P) int32; entries >= n_pages = unallocated
+    positions: jax.Array,  # (b, T) absolute cache positions
+    cfg: ArchConfig,
+    *,
+    impl: str = "jnp",
+    valid: Optional[jax.Array] = None,  # (b, T) real (non-padded) tokens
+) -> Tuple[jax.Array, jax.Array]:
+    """MLA decode / chunk-extend against a *paged* compressed cache.
+
+    Each cache slot stores ``concat(c_kv, k_rope)``; the absorbed-form
+    score ``q_lat . c_kv + q_rope . k_rope`` is a single dot against that
+    concatenated slot, so the paged flash kernel serves MLA as its
+    ``Hkv = 1`` case with values read from the first ``kv_lora_rank``
+    columns of the shared page (``v_width``).  The jnp fallback keeps the
+    two score terms as separate einsums so it is numerically identical to
+    the dense ``apply_mla_decode`` path (token parity with ``cache_mode=
+    'dense'``).  Writes for padded/parked rows go to the out-of-bounds
+    page sentinel and are dropped.
+    """
+    b, T, _ = x.shape
+    h, qk, qr, vd, r = (
+        cfg.n_heads,
+        cfg.nope_head_dim,
+        cfg.rope_head_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    q_nope, q_rope = _project_q(p, x, cfg, positions)  # (b,T,h,*)
+    c_new, kr_new = _compress_kv(p, x, cfg, positions)  # (b,T,r), (b,T,qr)
+    kv_new = jnp.concatenate([c_new, kr_new], axis=-1)  # (b,T,r+qr)
+
+    n_pages, ps = kv_pages.shape[0], kv_pages.shape[1]
+    P = page_table.shape[1]
+    rows = jnp.arange(b)[:, None]
+    wp = page_table[rows, jnp.minimum(positions // ps, P - 1)]  # (b,T)
+    if valid is not None:
+        wp = jnp.where(valid, wp, n_pages)  # out of bounds -> dropped
+    kv_pages = kv_pages.at[wp, positions % ps].set(kv_new.astype(kv_pages.dtype))
+
+    k_up = p["k_up"].reshape(r, h, qk)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, k_up)  # (b,T,h,r)
+    scale = 1.0 / math.sqrt(qk + qr)
+
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # (b,T,h,r+qr)
+        ctx = kops.paged_attention(
+            q_eff, kv_pages[:, :, None, :], kv_pages[:, :, None, :],
+            page_table, positions[:, 0], scale=scale, v_width=r,
+        )  # (b,T,h,r)
+    else:
+        safe = jnp.minimum(page_table, n_pages - 1)
+        kv_full = kv_pages[safe].reshape(b, P * ps, r + qr)
+        logits = (
+            jnp.einsum("bqhr,btr->bhqt", q_lat, kv_full[..., :r],
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bqhd,btd->bhqt", q_rope, kv_full[..., r:],
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        kv_pos = jnp.arange(P * ps)[None, None, None, :]
+        alloc = jnp.repeat(page_table < n_pages, ps, axis=1)  # (b, P*ps)
+        mask = jnp.logical_and(
+            kv_pos <= positions[:, None, :, None], alloc[:, None, None, :]
+        )
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhqt,btr->bqhr", probs, kv_full[..., :r])
+
+    v_up = p["v_up"].reshape(r, h, vd)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, v_up).reshape(b, T, h * vd)
+    return shard(out @ p["wo"], "batch", "seq", "embed"), kv_pages
+
+
 def apply_mla_decode(
     p: Params,
     x: jax.Array,  # (b, 1, d)

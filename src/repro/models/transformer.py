@@ -56,6 +56,10 @@ class ModelRuntime:
     dtype: Any = jnp.float32
     attn_impl: str = "auto"  # auto | direct | chunked | kernel
     attn_chunk: int = 1024
+    # paged-cache attention: "kernel" = Pallas flash-decode/chunk-extend
+    # through the page table (interpret mode off-TPU), "jnp" = gather the
+    # pages and reuse the dense attention path (the CPU-fast reference)
+    paged_attn_impl: str = "auto"  # auto | kernel | jnp
     moe_strategy: str = "capacity"
     use_ssd_kernel: bool = False
     remat: bool = False
@@ -69,6 +73,11 @@ class ModelRuntime:
         if self.attn_impl != "auto":
             return self.attn_impl
         return "chunked" if seq_len > 4096 else "direct"
+
+    def resolve_paged_attn(self) -> str:
+        if self.paged_attn_impl != "auto":
+            return self.paged_attn_impl
+        return "kernel" if jax.default_backend() == "tpu" else "jnp"
 
 
 # ============================================================ chunked attention
@@ -302,6 +311,121 @@ def _attn_decode(
     # the decode matmul is partial + psum rather than a weight gather
     out = shard(out, "act_batch", "seq", "act_heads")
     return shard(out @ p["wo"], "batch", "seq", "embed"), cache_k, cache_v
+
+
+# ------------------------------------------------------- paged KV attention
+def _paged_gqa(
+    q: jax.Array,  # (b, T, H, hd)
+    k_pages: jax.Array,  # (n_pages, ps, Hkv, hd)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (b, P) int32; >= n_pages = unallocated
+    q_positions: jax.Array,  # (b, T)
+    cfg: ArchConfig,
+    rt: ModelRuntime,
+) -> jax.Array:
+    """Attention against the paged cache: Pallas flash kernel through the
+    page table, or the jnp fallback (gather pages -> dense ``gqa_attention``,
+    byte-identical math to the dense cache path so paged and dense engines
+    stay token-parity)."""
+    if rt.resolve_paged_attn() == "kernel":
+        from repro.kernels import ops as kops
+
+        return kops.paged_attention(
+            q, k_pages, v_pages, page_table, q_positions[:, 0],
+            softcap=cfg.attn_logit_softcap,
+        )
+    n_pages, ps, hkv, hd = k_pages.shape
+    b = q.shape[0]
+    P = page_table.shape[1]
+    safe = jnp.minimum(page_table, n_pages - 1)
+    kf = k_pages[safe].reshape(b, P * ps, hkv, hd)
+    vf = v_pages[safe].reshape(b, P * ps, hkv, hd)
+    kv_pos = jnp.broadcast_to(jnp.arange(P * ps, dtype=jnp.int32)[None], (b, P * ps))
+    # unallocated pages gather garbage from the clamped physical page; the
+    # allocator keeps them past every query's frontier, but masking them
+    # also keeps padded prefill rows finite
+    kv_mask = jnp.repeat(page_table < n_pages, ps, axis=1)
+    return gqa_attention(
+        q, kf, vf,
+        q_positions=q_positions, kv_positions=kv_pos, kv_mask=kv_mask,
+        logit_softcap=cfg.attn_logit_softcap,
+    )
+
+
+def _attn_decode_paged(
+    p: Params,
+    x: jax.Array,  # (b,1,d)
+    k_pages: jax.Array,  # (n_pages, ps, hkv, hd) — this layer's page pool
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (b, P)
+    pos: jax.Array,  # (b,) per-row cache positions
+    cfg: ArchConfig,
+    rt: ModelRuntime,
+    *,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode token per row against the paged cache.
+
+    The new K/V lands at physical slot ``(page_table[b, pos//ps], pos%ps)``;
+    rows whose table entry is the out-of-bounds sentinel (parked slots —
+    their pages were freed) have the scatter dropped by JAX, so a dead row
+    can never write into a page now owned by someone else."""
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b = x.shape[0]
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos_v[:, None]
+    q, k, v = qkv_project(p, x, h, hkv, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    n_pages, ps = k_pages.shape[0], k_pages.shape[1]
+    P = page_table.shape[1]
+    rows = jnp.arange(b)
+    phys = page_table[rows, jnp.minimum(pos_v // ps, P - 1)]  # (b,) OOB = dropped
+    off = pos_v % ps
+    k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
+    out = _paged_gqa(q, k_pages, v_pages, page_table, positions, cfg, rt)
+    out = out.reshape(b, 1, h * hd)
+    out = shard(out, "act_batch", "seq", "act_heads")
+    return shard(out @ p["wo"], "batch", "seq", "embed"), k_pages, v_pages
+
+
+def _attn_extend_paged(
+    p: Params,
+    x: jax.Array,  # (b,T,d)
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    positions: jax.Array,  # (b,T) absolute positions of the chunk tokens
+    cfg: ArchConfig,
+    rt: ModelRuntime,
+    *,
+    use_rope: bool = True,
+    valid: Optional[jax.Array] = None,  # (b,T) real (non-padded) tokens
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunk-extend against the paged cache: append T tokens per row and
+    attend each query through the page table.  Padded tokens write to the
+    out-of-bounds page sentinel (dropped); their garbage outputs are
+    discarded by the caller's last-valid-token gather."""
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b, T, _ = x.shape
+    q, k, v = qkv_project(p, x, h, hkv, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    n_pages, ps = k_pages.shape[0], k_pages.shape[1]
+    P = page_table.shape[1]
+    rows = jnp.arange(b)[:, None]
+    wp = page_table[rows, jnp.minimum(positions // ps, P - 1)]  # (b,T)
+    if valid is not None:
+        wp = jnp.where(valid, wp, n_pages)  # out of bounds -> dropped
+    k_pages = k_pages.at[wp, positions % ps].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[wp, positions % ps].set(v.astype(v_pages.dtype))
+    out = _paged_gqa(q, k_pages, v_pages, page_table, positions, cfg, rt)
+    out = out.reshape(b, T, h * hd)
+    out = shard(out, "act_batch", "seq", "act_heads")
+    return shard(out @ p["wo"], "batch", "seq", "embed"), k_pages, v_pages
 
 
 # -------------------------------------------------- per-family layer init/apply
@@ -677,12 +801,62 @@ class Model:
         return loss, {"loss": loss, "tokens": jnp.sum(mask)}
 
     # ------------------------------------------------------------ decode
-    def init_cache(self, batch: int, max_len: int, dtype=None) -> Params:
+    @property
+    def supports_paged_cache(self) -> bool:
+        """Can this architecture's decode cache be paged?
+
+        SSM/hybrid state is O(1) per slot (nothing to page), encoder-
+        decoder carries a static cross cache, and rolling sliding-window
+        caches already bound memory by the window (and their slot->position
+        reconstruction is incompatible with page indirection)."""
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid") or cfg.is_encoder_decoder:
+            return False
+        return cfg.sliding_window == 0
+
+    def init_cache(
+        self,
+        batch: int,
+        max_len: int,
+        dtype=None,
+        *,
+        paged: bool = False,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+    ) -> Params:
+        """Decode cache pytree.
+
+        ``paged=True`` replaces the per-slot dense ``max_len`` reservation
+        with a shared pool of ``n_pages`` fixed-size pages plus a per-slot
+        ``page_table`` (``(batch, max_len/page_size)`` int32).  Table
+        entries hold the out-of-bounds sentinel ``n_pages`` until the
+        owner (the serving engine's allocator) backs them with a physical
+        page; cache memory then scales with tokens actually resident
+        instead of ``batch * max_len`` worst case.
+        """
         cfg = self.cfg
         dtype = dtype or self.rt.dtype
         L = cfg.n_layers
         hd = cfg.resolved_head_dim
         cache: Params = {}
+        if paged:
+            if not self.supports_paged_cache:
+                raise ValueError(
+                    f"paged cache unsupported for arch {cfg.name!r} "
+                    "(ssm/hybrid state, enc-dec cross cache, or rolling "
+                    "sliding-window cache)"
+                )
+            ps = int(page_size)
+            pages_per_slot = -(-max_len // ps)
+            pool = batch * pages_per_slot if n_pages is None else int(n_pages)
+            cache["page_table"] = jnp.full((batch, pages_per_slot), pool, jnp.int32)
+            if cfg.use_mla:
+                width = cfg.kv_lora_rank + cfg.rope_head_dim
+                cache["kv_pages"] = jnp.zeros((L, pool, ps, width), dtype)
+            else:
+                cache["k_pages"] = jnp.zeros((L, pool, ps, cfg.n_kv_heads, hd), dtype)
+                cache["v_pages"] = jnp.zeros((L, pool, ps, cfg.n_kv_heads, hd), dtype)
+            return cache
         if cfg.family == "ssm":
             cache["state"] = _stack_states(ssm_mod.mamba2_decode_state(cfg, batch, dtype), L)
         elif cfg.family == "hybrid":
@@ -718,6 +892,10 @@ class Model:
         cfg, rt = self.cfg, self.rt
         pos = jnp.asarray(pos, jnp.int32)  # scalar (uniform) or (B,) per-row
         x = self._embed_decode(params, tokens, pos)
+        if "page_table" in cache:
+            if cfg.use_mla:
+                return self._decode_mla_paged(params, cache, x, pos)
+            return self._decode_attn_paged(params, cache, x, pos)
         if cfg.family in ("ssm", "hybrid"):
             return self._decode_ssm(params, cache, x, pos)
         if cfg.use_mla:
@@ -783,6 +961,83 @@ class Model:
             offset += n
         new_cache["k"] = jnp.concatenate(k_parts, 0) if len(k_parts) > 1 else k_parts[0]
         new_cache["v"] = jnp.concatenate(v_parts, 0) if len(v_parts) > 1 else v_parts[0]
+        return self._logits(params, h), new_cache
+
+    def _decode_attn_paged(self, params, cache, x, pos):
+        cfg, rt = self.cfg, self.rt
+        b = x.shape[0]
+        pos_v = jnp.broadcast_to(pos, (b,))
+        table = cache["page_table"]
+
+        def body_fn(h, xs):
+            layer_p, kp, vp = xs
+            hn = apply_norm(layer_p["ln1"], h, cfg.norm, cfg.norm_eps)
+            a, kp, vp = _attn_decode_paged(
+                layer_p["attn"], hn, kp, vp, table, pos_v, cfg, rt,
+                use_rope=not cfg.max_position_embeddings,
+            )
+            h = h + a
+            hn = apply_norm(layer_p["ln2"], h, cfg.norm, cfg.norm_eps)
+            if "moe" in layer_p:
+                h = h + moe_mod.apply_moe(layer_p["moe"], hn, cfg, rt.moe_strategy)
+            else:
+                h = h + apply_mlp(layer_p["mlp"], hn, cfg.activation)
+            return h, (kp, vp)
+
+        h = x
+        new_cache = dict(cache)
+        k_parts, v_parts = [], []
+        offset = 0
+        for group in ("dense_layers", "layers"):
+            if group not in params:
+                continue
+            stacked = params[group]
+            n = _stack_len(stacked)
+            xs = (stacked, cache["k_pages"][offset : offset + n],
+                  cache["v_pages"][offset : offset + n])
+            h, (nk, nv) = self._maybe_scan(body_fn, h, xs)
+            k_parts.append(nk)
+            v_parts.append(nv)
+            offset += n
+        new_cache["k_pages"] = jnp.concatenate(k_parts, 0) if len(k_parts) > 1 else k_parts[0]
+        new_cache["v_pages"] = jnp.concatenate(v_parts, 0) if len(v_parts) > 1 else v_parts[0]
+        return self._logits(params, h), new_cache
+
+    def _decode_mla_paged(self, params, cache, x, pos):
+        cfg, rt = self.cfg, self.rt
+        b = x.shape[0]
+        pos_v = jnp.broadcast_to(pos, (b,))
+        table = cache["page_table"]
+
+        def body_fn(h, xs):
+            layer_p, kvp = xs
+            hn = apply_norm(layer_p["ln1"], h, cfg.norm, cfg.norm_eps)
+            a, kvp = mla_mod.apply_mla_paged(
+                layer_p["attn"], hn, kvp, table, pos_v[:, None], cfg,
+                impl=rt.resolve_paged_attn(),
+            )
+            h = h + a
+            hn = apply_norm(layer_p["ln2"], h, cfg.norm, cfg.norm_eps)
+            if "moe" in layer_p:
+                h = h + moe_mod.apply_moe(layer_p["moe"], hn, cfg, rt.moe_strategy)
+            else:
+                h = h + apply_mlp(layer_p["mlp"], hn, cfg.activation)
+            return h, kvp
+
+        h = x
+        parts = []
+        offset = 0
+        for group in ("dense_layers", "layers"):
+            if group not in params:
+                continue
+            stacked = params[group]
+            n = _stack_len(stacked)
+            xs = (stacked, cache["kv_pages"][offset : offset + n])
+            h, nkv = self._maybe_scan(body_fn, h, xs)
+            parts.append(nkv)
+            offset += n
+        new_cache = dict(cache)
+        new_cache["kv_pages"] = jnp.concatenate(parts, 0) if len(parts) > 1 else parts[0]
         return self._logits(params, h), new_cache
 
     def _decode_mla(self, params, cache, x, pos):
@@ -926,7 +1181,12 @@ class Model:
         if cfg.max_position_embeddings:
             x = x + params["pos"][jnp.clip(positions, 0, cfg.max_position_embeddings - 1)]
         x = x.astype(self.rt.dtype)
-        if cfg.family in ("ssm", "hybrid"):
+        if "page_table" in cache:
+            if cfg.use_mla:
+                h, new_cache = self._prefill_mla_paged(params, cache, x, positions, valid)
+            else:
+                h, new_cache = self._prefill_attn_paged(params, cache, x, positions, valid)
+        elif cfg.family in ("ssm", "hybrid"):
             h, new_cache = self._prefill_ssm(params, cache, x, positions, lengths, valid)
         elif cfg.use_mla:
             h, new_cache = self._prefill_mla(params, cache, x, positions, valid)
@@ -969,6 +1229,51 @@ class Model:
             offset += n
         new_cache["k"] = jnp.concatenate(k_parts, 0) if len(k_parts) > 1 else k_parts[0]
         new_cache["v"] = jnp.concatenate(v_parts, 0) if len(v_parts) > 1 else v_parts[0]
+        return h, new_cache
+
+    def _prefill_attn_paged(self, params, cache, x, positions, valid):
+        cfg, rt = self.cfg, self.rt
+        table = cache["page_table"]
+
+        def body_fn(h, xs):
+            layer_p, kp, vp = xs
+            hn = apply_norm(layer_p["ln1"], h, cfg.norm, cfg.norm_eps)
+            a, kp, vp = _attn_extend_paged(
+                layer_p["attn"], hn, kp, vp, table, positions, cfg, rt,
+                use_rope=not cfg.max_position_embeddings, valid=valid,
+            )
+            h = h + a
+            hn = apply_norm(layer_p["ln2"], h, cfg.norm, cfg.norm_eps)
+            h = h + apply_mlp(layer_p["mlp"], hn, cfg.activation)
+            return h, (kp, vp)
+
+        h, (nk, nv) = self._maybe_scan(
+            body_fn, x, (params["layers"], cache["k_pages"], cache["v_pages"])
+        )
+        new_cache = dict(cache)
+        new_cache["k_pages"] = nk
+        new_cache["v_pages"] = nv
+        return h, new_cache
+
+    def _prefill_mla_paged(self, params, cache, x, positions, valid):
+        cfg, rt = self.cfg, self.rt
+        table = cache["page_table"]
+
+        def body_fn(h, xs):
+            layer_p, kvp = xs
+            hn = apply_norm(layer_p["ln1"], h, cfg.norm, cfg.norm_eps)
+            a, kvp = mla_mod.apply_mla_paged(
+                layer_p["attn"], hn, kvp, table, positions, cfg,
+                impl=rt.resolve_paged_attn(), valid=valid,
+            )
+            h = h + a
+            hn = apply_norm(layer_p["ln2"], h, cfg.norm, cfg.norm_eps)
+            h = h + apply_mlp(layer_p["mlp"], hn, cfg.activation)
+            return h, kvp
+
+        h, nkv = self._maybe_scan(body_fn, x, (params["layers"], cache["kv_pages"]))
+        new_cache = dict(cache)
+        new_cache["kv_pages"] = nkv
         return h, new_cache
 
     def _prefill_mla(self, params, cache, x, positions, valid):

@@ -26,6 +26,25 @@ hardware, not by dispatch count):
   ``sample_on_device=False`` restores the host path (now numerically
   stable: max-subtracted softmax).
 
+- **cache**: ``cache_mode="paged"`` replaces the dense per-slot
+  ``max_len`` reservation with a shared pool of fixed-size KV pages and
+  a per-slot page table.  The engine owns the allocator: pages are
+  claimed *as positions are written* (allocate-on-write, ahead of each
+  dispatch) and returned to the free list the moment a request finishes,
+  so cache memory tracks tokens actually resident instead of the
+  worst-case ``max_batch * max_len`` reservation.  Freed slots' table
+  entries hold an out-of-bounds sentinel, so a parked row's (stale)
+  write is dropped on device rather than corrupting a page that has been
+  re-issued to another slot.  ``peak_pages`` / ``peak_cache_bytes``
+  record the high-water mark the benchmark compares against the dense
+  reservation.
+- **stop tokens**: requests may carry a ``stop_token``; the fused
+  dispatches return a done mask computed on device
+  (``repro.serving.sampling.done_mask``), so the host finalizes rows
+  straight off the mask instead of re-deriving the stop condition, and
+  finished rows are parked (pages freed) before the next tick's
+  dispatch.
+
 Dispatch accounting: ``decode_dispatches`` / ``prefill_dispatches`` /
 ``dispatches`` (their sum) and ``tokens_emitted`` /
 ``prompt_tokens_ingested`` feed ``benchmarks/bench_serving.py``'s
@@ -51,6 +70,9 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0  # 0 = greedy
+    # emitting this token id finishes the request (it is kept in the
+    # output); None disables.  Checked on device via the fused done mask.
+    stop_token: Optional[int] = None
     # filled by the engine
     output: List[int] = field(default_factory=list)
     done: bool = False
@@ -79,9 +101,19 @@ class ServeEngine:
         prefill_chunk: int = 16,
         dispatch_mode: str = "fused",
         sample_on_device: bool = True,
+        cache_mode: str = "dense",
+        page_size: int = 16,
+        total_pages: Optional[int] = None,
     ):
         if dispatch_mode not in ("fused", "grouped"):
             raise ValueError(f"dispatch_mode must be fused|grouped, got {dispatch_mode!r}")
+        if cache_mode not in ("dense", "paged"):
+            raise ValueError(f"cache_mode must be dense|paged, got {cache_mode!r}")
+        if cache_mode == "paged" and not model.supports_paged_cache:
+            raise ValueError(
+                "cache_mode='paged' unsupported for arch "
+                f"{model.cfg.name!r} (no pageable KV cache)"
+            )
         if dispatch_mode == "grouped" and model.cfg.family in ("ssm", "hybrid"):
             # per-group re-dispatch re-advances recurrent state every extra
             # call per tick (KV writes are idempotent, recurrences are not):
@@ -99,7 +131,37 @@ class ServeEngine:
         self.prefill_chunk = int(prefill_chunk)
         self.dispatch_mode = dispatch_mode
         self.sample_on_device = sample_on_device
-        self.cache = model.init_cache(max_batch, max_len)
+        self.cache_mode = cache_mode
+        self.page_size = int(page_size)
+        if cache_mode == "paged":
+            self.pages_per_slot = -(-max_len // self.page_size)
+            dense_pages = max_batch * self.pages_per_slot
+            self.n_pages = int(total_pages) if total_pages else dense_pages
+            self.cache = model.init_cache(
+                max_batch, max_len,
+                paged=True, page_size=self.page_size, n_pages=self.n_pages,
+            )
+            # host-side allocator: free list + per-slot page lists + the
+            # numpy shadow of the device page table (OOB sentinel = free)
+            self._free_pages = list(range(self.n_pages))
+            self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+            self._table = np.full(
+                (max_batch, self.pages_per_slot), self.n_pages, np.int32
+            )
+            self._table_dirty = True
+            # bytes of ONE page across every layer and pool leaf (k+v, or
+            # the MLA latent pool) — peak_cache_bytes = peak_pages * this
+            self.page_bytes = sum(
+                leaf.size * leaf.dtype.itemsize // self.n_pages
+                for name, leaf in self.cache.items()
+                if name.endswith("_pages")
+            )
+            self.dense_cache_bytes = dense_pages * self.page_bytes
+            self.pages_in_use = 0
+            self.peak_pages = 0
+            self.page_allocs = 0  # lifetime allocations (> n_pages => reuse)
+        else:
+            self.cache = model.init_cache(max_batch, max_len)
         self.slots = [_Slot() for _ in range(max_batch)]
         self.pending: List[Request] = []
         self.finished: List[Request] = []
@@ -131,6 +193,64 @@ class ServeEngine:
         k = self.cache.get("k") if isinstance(self.cache, dict) else None
         return k is not None and k.shape[2] < self.max_len
 
+    # ------------------------------------------------------- page allocator
+    @property
+    def peak_cache_bytes(self) -> int:
+        """High-water cache footprint: pages actually resident (paged) or
+        the full dense reservation."""
+        if self.cache_mode != "paged":
+            return sum(
+                leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(self.cache)
+            )
+        return self.peak_pages * self.page_bytes
+
+    def _ensure_pages(self, row: int, n_tokens: int) -> None:
+        """Back row ``row``'s first ``n_tokens`` positions with physical
+        pages (allocate-on-write, called ahead of every dispatch that will
+        write those positions)."""
+        need = -(-n_tokens // self.page_size)
+        if need > self.pages_per_slot:
+            raise ValueError(
+                f"request needs {n_tokens} cache positions but max_len="
+                f"{self.max_len} caps a slot at {self.pages_per_slot} pages "
+                f"of {self.page_size} tokens"
+            )
+        pages = self._slot_pages[row]
+        while len(pages) < need:
+            if not self._free_pages:
+                raise RuntimeError(
+                    f"paged KV pool exhausted ({self.n_pages} pages of "
+                    f"{self.page_size} tokens); raise total_pages or lower "
+                    "concurrency"
+                )
+            pid = self._free_pages.pop()
+            self._table[row, len(pages)] = pid
+            pages.append(pid)
+            self.pages_in_use += 1
+            self.page_allocs += 1
+            self._table_dirty = True
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+
+    def _free_slot_pages(self, row: int) -> None:
+        """Free-on-finish: return the slot's pages to the pool and reset
+        its table row to the OOB sentinel (stale writes become no-ops)."""
+        pages = self._slot_pages[row]
+        if not pages:
+            return
+        self._free_pages.extend(reversed(pages))  # LIFO: reuse hot pages
+        self.pages_in_use -= len(pages)
+        self._slot_pages[row] = []
+        self._table[row, :] = self.n_pages
+        self._table_dirty = True
+
+    def _push_table(self) -> None:
+        """Sync the host page table to the device cache before a dispatch."""
+        if self.cache_mode == "paged" and self._table_dirty:
+            import jax.numpy as jnp
+
+            self.cache["page_table"] = jnp.asarray(self._table)
+            self._table_dirty = False
+
     # ------------------------------------------------------------- intake
     def submit(self, reqs: List[Request]) -> None:
         for r in reqs:
@@ -151,6 +271,12 @@ class ServeEngine:
                 self._reset_row(row)
 
     def _reset_row(self, row: int) -> None:
+        if self.cache_mode == "paged":
+            # nothing to zero: the row's pages went back to the free list
+            # at finish, its table row is the OOB sentinel, and stale data
+            # inside a re-issued page sits past the new owner's write
+            # frontier where the causal mask excludes it
+            return
         import jax.numpy as jnp
 
         def zero_row(x):
@@ -203,6 +329,8 @@ class ServeEngine:
             temps = np.zeros((B,), np.float32)
             streams = np.zeros((B,), np.int32)
             steps = np.zeros((B,), np.int32)
+            stops = np.full((B,), -1, np.int32)
+            max_news = np.full((B,), 1 << 30, np.int32)
             for i in rows:
                 slot = self.slots[i]
                 n = min(C, len(slot.remaining_prompt))
@@ -211,16 +339,23 @@ class ServeEngine:
                 lengths[i] = n
                 temps[i] = slot.req.temperature
                 streams[i] = slot.req.sample_stream
+                if slot.req.stop_token is not None:
+                    stops[i] = slot.req.stop_token
+                max_news[i] = slot.req.max_new_tokens
+                if self.cache_mode == "paged":
+                    self._ensure_pages(i, slot.pos + n)
+            self._push_table()
             if self.sample_on_device:
-                nxt, self.cache = self._prefill(
-                    self.params, self.cache, tokens, offsets, lengths, temps, streams, steps
+                nxt, done, self.cache = self._prefill(
+                    self.params, self.cache, tokens, offsets, lengths, temps,
+                    streams, steps, stops, max_news,
                 )
-                nxt, lg = np.asarray(nxt), None
+                nxt, done, lg = np.asarray(nxt), np.asarray(done), None
             else:
                 logits, self.cache = self._prefill(
                     self.params, self.cache, tokens, offsets, lengths
                 )
-                nxt, lg = None, np.asarray(logits)
+                nxt, done, lg = None, None, np.asarray(logits)
             self.prefill_dispatches += 1
             self.dispatches += 1
             self.heartbeat()
@@ -237,7 +372,7 @@ class ServeEngine:
                         if nxt is not None
                         else self._host_sample(lg[i], slot.req.temperature)
                     )
-                    self._accept_token(i, tok)
+                    self._accept_token(i, tok, bool(done[i]) if done is not None else None)
                     emitted += 1
 
     # -- decode -------------------------------------------------------------
@@ -248,10 +383,13 @@ class ServeEngine:
         temps = np.zeros((B,), np.float32)
         streams = np.zeros((B,), np.int32)
         steps = np.zeros((B,), np.int32)
+        stops = np.full((B,), -1, np.int32)
+        max_news = np.full((B,), 1 << 30, np.int32)
         active = []
         for i, slot in enumerate(self.slots):
-            # parked rows keep their stale pos: the write is confined to
-            # their own (dead) row, which is zeroed again at refill
+            # parked rows keep their stale pos: dense mode confines the
+            # write to their own (dead) row, which is zeroed at refill;
+            # paged mode drops it on the OOB page-table sentinel
             pos[i] = slot.pos
             if slot.req is None:
                 continue
@@ -265,26 +403,33 @@ class ServeEngine:
             temps[i] = slot.req.temperature
             streams[i] = slot.req.sample_stream
             steps[i] = len(slot.req.output)
-        return active, tokens, pos, temps, streams, steps
+            if slot.req.stop_token is not None:
+                stops[i] = slot.req.stop_token
+            max_news[i] = slot.req.max_new_tokens
+            if self.cache_mode == "paged":
+                self._ensure_pages(i, slot.pos + 1)
+        return active, tokens, pos, temps, streams, steps, stops, max_news
 
     def _decode_dispatch(
-        self, tokens, pos, temps, streams, steps
-    ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+        self, tokens, pos, temps, streams, steps, stops, max_news
+    ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray], Optional[np.ndarray]]:
+        self._push_table()
         if self.sample_on_device:
-            nxt, self.cache = self._decode(
-                self.params, self.cache, tokens, pos, temps, streams, steps
+            nxt, done, self.cache = self._decode(
+                self.params, self.cache, tokens, pos, temps, streams, steps,
+                stops, max_news,
             )
-            out: Tuple[Optional[np.ndarray], Optional[np.ndarray]] = (np.asarray(nxt), None)
+            out = (np.asarray(nxt), np.asarray(done), None)
         else:
             logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
-            out = (None, np.asarray(logits))
+            out = (None, None, np.asarray(logits))
         self.decode_dispatches += 1
         self.steps_executed += 1
         self.dispatches += 1
         self.heartbeat()
         return out
 
-    def _advance_rows(self, rows, nxt, lg) -> int:
+    def _advance_rows(self, rows, nxt, done, lg) -> int:
         emitted = 0
         for i in rows:
             slot = self.slots[i]
@@ -297,16 +442,16 @@ class ServeEngine:
             tok = (
                 int(nxt[i]) if nxt is not None else self._host_sample(lg[i], slot.req.temperature)
             )
-            self._accept_token(i, tok)
+            self._accept_token(i, tok, bool(done[i]) if done is not None else None)
             emitted += 1
         return emitted
 
     def _decode_tick_fused(self) -> int:
-        active, tokens, pos, temps, streams, steps = self._build_decode_inputs()
+        active, *inputs = self._build_decode_inputs()
         if not active:
             return 0
-        nxt, lg = self._decode_dispatch(tokens, pos, temps, streams, steps)
-        return self._advance_rows(active, nxt, lg)
+        nxt, done, lg = self._decode_dispatch(*inputs)
+        return self._advance_rows(active, nxt, done, lg)
 
     def _decode_tick_grouped(self) -> int:
         """Seed-style dispatching: one jitted call per distinct slot
@@ -314,7 +459,7 @@ class ServeEngine:
         cache writes are correct and idempotent across the tick's calls
         (the seed's scalar-pos variant overwrote OTHER rows' histories);
         only the group's rows consume their call's outputs."""
-        active, tokens, pos, temps, streams, steps = self._build_decode_inputs()
+        active, *inputs = self._build_decode_inputs()
         if not active:
             return 0
         groups: Dict[int, List[int]] = {}
@@ -322,20 +467,27 @@ class ServeEngine:
             groups.setdefault(self.slots[i].pos, []).append(i)
         emitted = 0
         for _, rows in sorted(groups.items()):
-            nxt, lg = self._decode_dispatch(tokens, pos, temps, streams, steps)
-            emitted += self._advance_rows(rows, nxt, lg)
+            nxt, done, lg = self._decode_dispatch(*inputs)
+            emitted += self._advance_rows(rows, nxt, done, lg)
         return emitted
 
     # -- bookkeeping ---------------------------------------------------------
-    def _accept_token(self, row: int, tok: int) -> None:
+    def _accept_token(self, row: int, tok: int, done: Optional[bool] = None) -> None:
         slot = self.slots[row]
         slot.req.output.append(tok)
         self.tokens_emitted += 1
-        if len(slot.req.output) >= slot.req.max_new_tokens or slot.pos >= self.max_len - 1:
+        if done is None:
+            # host fallback (sample_on_device=False): re-derive the mask
+            done = len(slot.req.output) >= slot.req.max_new_tokens or (
+                slot.req.stop_token is not None and tok == slot.req.stop_token
+            )
+        if done or slot.pos >= self.max_len - 1:
             slot.req.done = True
             self.finished.append(slot.req)
             slot.req = None
             slot.remaining_prompt = []
+            if self.cache_mode == "paged":
+                self._free_slot_pages(row)
 
     def _host_sample(self, lg_row: np.ndarray, temperature: float) -> int:
         """Host fallback sampler (``sample_on_device=False``): greedy or

@@ -17,6 +17,14 @@ Temperature sampling uses the Gumbel-max trick on max-subtracted logits:
 ``argmax((logits - max(logits)) / T + gumbel)`` is an exact draw from
 ``softmax(logits / T)`` and never exponentiates raw logits (the seed's
 host sampler overflowed ``np.exp(logits / T)`` for large logits).
+
+Stop-token handling is on-device too: the fused dispatches take per-row
+``stops`` (stop token id, ``-1`` = none) and ``max_news`` vectors and
+return a *done mask* next to the sampled ids.  The engine finalizes rows
+straight off that mask — the host never re-derives the stop condition
+from the token stream, and a finished row is parked (and its cache pages
+freed in paged mode) before the next dispatch instead of being filtered
+after the fact.
 """
 
 from __future__ import annotations
@@ -51,10 +59,21 @@ def sample_tokens(
     return jnp.where(temps > 0, sampled, greedy)
 
 
+def done_mask(
+    nxt: jax.Array,  # (B,) sampled token ids
+    steps: jax.Array,  # (B,) tokens already generated (before this one)
+    stops: jax.Array,  # (B,) stop token id, -1 = no stop token
+    max_news: jax.Array,  # (B,) per-request new-token budget
+) -> jax.Array:
+    """Per-row request-finished mask, computed inside the dispatch."""
+    hit_stop = jnp.logical_and(stops >= 0, nxt == stops)
+    return jnp.logical_or(hit_stop, steps + 1 >= max_news)
+
+
 def make_decode_step(model, base_seed: int, on_device: bool) -> Callable:
     """Build the engine's jit target: vectorized-position decode, with
-    sampling fused on-device (default) or raw logits returned for the
-    host-sampling fallback."""
+    sampling + stop-token done mask fused on-device (default) or raw
+    logits returned for the host-sampling fallback."""
     vocab = model.cfg.vocab_size
 
     if not on_device:
@@ -65,19 +84,20 @@ def make_decode_step(model, base_seed: int, on_device: bool) -> Callable:
 
         return logits_step
 
-    def step(params, cache, tokens, pos, temps, streams, steps):
+    def step(params, cache, tokens, pos, temps, streams, steps, stops, max_news):
         logits, cache = model.decode_step(params, cache, tokens, pos)
         nxt = sample_tokens(
             logits[:, 0, :vocab], temps, streams, steps, base_seed=base_seed
         )
-        return nxt, cache
+        return nxt, done_mask(nxt, steps, stops, max_news), cache
 
     return step
 
 
 def make_prefill_step(model, base_seed: int, on_device: bool) -> Callable:
     """Build the engine's fused chunked-prefill jit target (last-token
-    logits sampled on-device, or returned raw for the host fallback)."""
+    logits sampled on-device with the done mask, or returned raw for the
+    host fallback)."""
     vocab = model.cfg.vocab_size
 
     if not on_device:
@@ -88,9 +108,10 @@ def make_prefill_step(model, base_seed: int, on_device: bool) -> Callable:
 
         return logits_step
 
-    def step(params, cache, tokens, offsets, lengths, temps, streams, steps):
+    def step(params, cache, tokens, offsets, lengths, temps, streams, steps,
+             stops, max_news):
         logits, cache = model.prefill_chunk(params, cache, tokens, offsets, lengths)
         nxt = sample_tokens(logits[:, :vocab], temps, streams, steps, base_seed=base_seed)
-        return nxt, cache
+        return nxt, done_mask(nxt, steps, stops, max_news), cache
 
     return step

@@ -111,7 +111,7 @@ def test_applicability_matrix():
             ok, reason = cell_applicable(cfg, shape)
             assert ok or reason
             rows += 1
-    assert rows == 66  # 11 archs x 6 shapes (4 original + 2 serving cells)
+    assert rows == 77  # 11 archs x 7 shapes (4 original + 3 serving cells)
 
     assert cell_applicable(get_arch("mamba2-1.3b"), SHAPES["long_500k"])[0]
     assert cell_applicable(get_arch("zamba2-1.2b"), SHAPES["long_500k"])[0]
@@ -127,6 +127,15 @@ def test_applicability_matrix():
     assert not cell_applicable(get_arch("whisper-tiny"), SHAPES["serve_prefill_32k"])[0]
     for arch in ARCHS + ["ds-paper-100m"]:
         assert cell_applicable(get_arch(arch), SHAPES["serve_ragged_32k"])[0]
+
+    # serve_paged gates: only archs with a pageable KV cache (no O(1)
+    # recurrent state, no enc-dec cross cache, no rolling window)
+    assert cell_applicable(get_arch("qwen2-72b"), SHAPES["serve_paged_32k"])[0]
+    assert cell_applicable(get_arch("deepseek-v2-236b"), SHAPES["serve_paged_32k"])[0]
+    assert not cell_applicable(get_arch("mamba2-1.3b"), SHAPES["serve_paged_32k"])[0]
+    assert not cell_applicable(get_arch("zamba2-1.2b"), SHAPES["serve_paged_32k"])[0]
+    assert not cell_applicable(get_arch("whisper-tiny"), SHAPES["serve_paged_32k"])[0]
+    assert not cell_applicable(get_arch("mixtral-8x7b"), SHAPES["serve_paged_32k"])[0]
 
 
 def test_param_counts_match_published():

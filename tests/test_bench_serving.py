@@ -23,3 +23,11 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     # prompt ingestion is chunked, not token-at-a-time
     assert fused["prompt_tokens_per_prefill_dispatch"] > 1.0
     assert grouped["prefill_dispatches"] == 0  # seed-style path has none
+    # paged scenario: peak cache strictly below the dense reservation at
+    # equal concurrency, same dispatch schedule as the fused engine
+    paged = report["engines"]["paged"]
+    assert paged["peak_cache_bytes"] < paged["dense_cache_bytes"]
+    assert paged["pages_in_use_peak"] <= paged["total_pages"]
+    assert paged["dispatches_per_token"] == fused["dispatches_per_token"]
+    assert paged["tokens_emitted"] == fused["tokens_emitted"]
+    assert report["paged_cache_reduction"] > 1.0

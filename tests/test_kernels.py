@@ -69,6 +69,98 @@ def test_flash_attention_model_layout():
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
 
 
+# ------------------------------------------------- paged flash decode/extend
+def _paged_setup(B, Hkv, dk, ps, P, n_pages, offsets, dtype=jnp.float32, seed=0):
+    """Random page pools + a permuted page table backing each row's
+    positions [0, offsets[b] + T) — the allocator invariant the serving
+    engine maintains."""
+    rng = np.random.default_rng(seed)
+    k_pages = jnp.asarray(rng.standard_normal((n_pages, ps, Hkv, dk)), dtype)
+    v_pages = jnp.asarray(rng.standard_normal((n_pages, ps, Hkv, dk)), dtype)
+    return k_pages, v_pages
+
+
+def _alloc_table(B, P, n_pages, frontiers, ps, seed=1):
+    """Disjoint physical pages per row covering each row's frontier;
+    everything else holds the out-of-bounds sentinel (unallocated)."""
+    rng = np.random.default_rng(seed)
+    perm = list(rng.permutation(n_pages))
+    table = np.full((B, P), n_pages, np.int32)
+    for b, frontier in enumerate(frontiers):
+        for j in range(-(-frontier // ps)):
+            table[b, j] = perm.pop()
+    return jnp.asarray(table)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T", [1, 4])  # flash-decode and chunk-extend
+@pytest.mark.parametrize("hkv,g", [(2, 4), (1, 8)])  # GQA and MLA-style Hkv=1
+def test_paged_attention_vs_reference(T, hkv, g, dtype):
+    B, dk, ps, P = 3, 32, 8, 4
+    n_pages = 10
+    h = hkv * g
+    offsets = np.asarray([5, 0, 9], np.int32)  # ragged rows
+    k_pages, v_pages = _paged_setup(B, hkv, dk, ps, P, n_pages, offsets, dtype)
+    table = _alloc_table(B, P, n_pages, offsets + T, ps)
+    q = jnp.asarray(
+        np.random.default_rng(2).standard_normal((B, T, h, dk)), dtype
+    )
+    out = ops.paged_attention(
+        q, k_pages, v_pages, table, jnp.asarray(offsets), interpret=True
+    )
+    want = ref.paged_attention_reference(q, k_pages, v_pages, table, jnp.asarray(offsets))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_paged_attention_matches_contiguous_reference():
+    """Pages laid out contiguously == plain causal attention over the
+    logical sequence: the kernel's page indirection is position-exact."""
+    B, T, h, dk, ps = 2, 8, 4, 16, 4
+    seq = 16  # rows fully resident: positions 0..seq-1 already written
+    P = seq // ps
+    n_pages = B * P
+    rng = np.random.default_rng(3)
+    # identity layout: row b's logical page j is physical page b*P+j
+    table = jnp.asarray(
+        np.arange(B * P, dtype=np.int32).reshape(B, P)
+    )
+    kv = rng.standard_normal((B, seq, h, dk)).astype(np.float32)
+    vv = rng.standard_normal((B, seq, h, dk)).astype(np.float32)
+    k_pages = jnp.asarray(kv.reshape(B * P, ps, h, dk))
+    v_pages = jnp.asarray(vv.reshape(B * P, ps, h, dk))
+    q = jnp.asarray(rng.standard_normal((B, T, h, dk)), jnp.float32)
+    offsets = jnp.full((B,), seq - T, jnp.int32)  # chunk = the last T tokens
+    out = ops.paged_attention(q, k_pages, v_pages, table, offsets, interpret=True)
+    # oracle: causal attention of the full sequence, last T rows
+    full_q = jnp.asarray(rng.standard_normal((B, seq, h, dk)), jnp.float32)
+    full_q = full_q.at[:, seq - T :].set(q)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * h, -1, dk)  # noqa: E731
+    want = ref.attention_reference(fold(full_q), fold(jnp.asarray(kv)), fold(jnp.asarray(vv)), causal=True)
+    want = want.reshape(B, h, seq, dk).transpose(0, 2, 1, 3)[:, seq - T :]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_parked_rows_are_finite_zero():
+    """Rows whose pages were all freed (OOB sentinel everywhere) must
+    produce zeros, not NaNs — the engine discards them but NaNs would
+    poison the dispatch."""
+    B, T, h, dk, ps, P, n_pages = 2, 1, 4, 16, 8, 4, 6
+    rng = np.random.default_rng(4)
+    k_pages = jnp.asarray(rng.standard_normal((n_pages, ps, h, dk)), jnp.float32)
+    table = np.full((B, P), n_pages, np.int32)
+    table[0, 0] = 2  # row 0 live, row 1 parked
+    q = jnp.asarray(rng.standard_normal((B, T, h, dk)), jnp.float32)
+    out = ops.paged_attention(
+        q, k_pages, k_pages, jnp.asarray(table), jnp.asarray([3, 3], jnp.int32),
+        interpret=True,
+    )
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.all(np.asarray(out[1]) == 0.0)
+    assert np.any(np.asarray(out[0]) != 0.0)
+
+
 # ----------------------------------------------------------------- SSD kernel
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
