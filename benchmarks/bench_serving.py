@@ -1,12 +1,14 @@
 """Serving-engine benchmark: fused single-dispatch engine vs the seed's
 per-position-group engine, plus the paged-KV-cache engine, on a ragged
-continuous-batching scenario.
+continuous-batching scenario — and the shared-prefix radix cache on a
+shared-system-prompt scenario.
 
-The scenario is deliberately hostile to per-group dispatching: mixed
-prompt lengths and more requests than slots, so mid-stream refills keep
-the batch ragged and the seed engine degenerates toward one jitted call
-per occupied slot per token.  The fused engine issues exactly one decode
-dispatch per tick and ingests prompts in ``prefill_chunk``-token slices.
+The ragged scenario is deliberately hostile to per-group dispatching:
+mixed prompt lengths and more requests than slots, so mid-stream refills
+keep the batch ragged and the seed engine degenerates toward one jitted
+call per occupied slot per token.  The fused engine issues exactly one
+decode dispatch per tick and ingests prompts in ``prefill_chunk``-token
+slices.
 
 The ``paged`` engine is the fused engine with ``cache_mode="paged"`` and
 a page pool sized to the workload's *actual* demand instead of the dense
@@ -14,7 +16,18 @@ a page pool sized to the workload's *actual* demand instead of the dense
 ``pages_in_use_peak`` next to dispatches/token, and the run fails if the
 paged peak is not strictly below the dense reservation (tokens/sec must
 also stay within 10% of the dense fused engine in full runs — wall-clock
-is too noisy to gate in ``--smoke``).
+is too noisy to gate in ``--smoke``).  The ragged paged run keeps
+``prefix_cache=False``: it is the PR 2 per-slot baseline.
+
+The shared-prefix scenario sends many requests carrying one system
+prompt with short distinct tails, after a priming request has populated
+the radix cache (steady-state serving).  It compares the dense fused
+engine, the per-slot paged engine, and the prefix-cache paged engine:
+emitted tokens must be byte-identical across all three, the prefix
+engine must prefill >= 2x fewer prompt tokens than the per-slot paged
+baseline (``prompt_tokens_skipped``), and its ``peak_cache_bytes`` must
+come in below the per-slot paged peak (shared pages are stored once,
+not per slot).
 
 Reports tokens/sec and dispatches/token per engine to
 ``BENCH_serving.json``::
@@ -22,10 +35,10 @@ Reports tokens/sec and dispatches/token per engine to
     PYTHONPATH=src python benchmarks/bench_serving.py            # full
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke    # tier-1 CI
 
-Smoke mode shrinks the workload to seconds on CPU but keeps the ragged
-structure, so a regression in dispatch count (the metric the tentpole
-optimizes) or in paged-cache accounting fails fast without waiting on
-wall-clock noise.
+Smoke mode shrinks the workload to seconds on CPU but keeps both
+structures, so a regression in dispatch count, paged-cache accounting,
+prefix hit rate, or paged-vs-dense token parity fails fast without
+waiting on wall-clock noise.
 """
 
 from __future__ import annotations
@@ -60,24 +73,46 @@ def ragged_requests(n_requests: int, max_new: int, seed: int = 0):
     ]
 
 
+def shared_prefix_requests(n_requests: int, max_new: int, *, prefix_len: int,
+                           tail_len: int, seed: int = 1):
+    """One shared system prompt + short distinct per-request tails."""
+    import numpy as np
+
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, 200, size=prefix_len)]
+    return [
+        Request(
+            uid=f"s{i}",
+            prompt=prefix + [int(t) for t in rng.integers(1, 200, size=tail_len)],
+            max_new_tokens=max_new,
+        )
+        for i in range(n_requests)
+    ], prefix
+
+
 _COUNTERS = (
     "decode_dispatches", "prefill_dispatches", "dispatches",
     "tokens_emitted", "prompt_tokens_ingested",
+    "prompt_tokens_skipped", "prefix_hit_tokens",
 )
 
 
 def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
-               prefill_chunk: int, page_size: int = 0, total_pages: int = 0) -> dict:
+               prefill_chunk: int, page_size: int = 0, total_pages: int = 0,
+               prefix_cache: bool = False, prime=None) -> dict:
     from repro.serving.engine import Request, ServeEngine
 
-    paged = mode == "paged"
+    paged = mode.startswith("paged")
     engine = ServeEngine(
         model, params,
         max_batch=max_batch, max_len=max_len,
         prefill_chunk=prefill_chunk,
         dispatch_mode="fused" if paged else mode,
         cache_mode="paged" if paged else "dense",
-        **(dict(page_size=page_size, total_pages=total_pages) if paged else {}),
+        **(dict(page_size=page_size, total_pages=total_pages,
+                prefix_cache=prefix_cache) if paged else {}),
     )
     # compile both dispatch paths on a throwaway request OUTSIDE the timed
     # region, then measure the real workload from its very first step —
@@ -87,10 +122,18 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
                            prompt=[1] * max(2 * max(prefill_chunk, 1), 2),
                            max_new_tokens=2)])
     engine.run_to_completion()
-    base = {k: getattr(engine, k) for k in _COUNTERS}
+    if prime is not None:
+        # steady-state shared-prefix serving: a priming request populates
+        # the radix cache (one prefill of the system prompt) before the
+        # measured window — run on every engine so wall-clocks compare
+        engine.submit([Request(uid="__prime__", prompt=list(prime),
+                               max_new_tokens=2)])
+        engine.run_to_completion()
+    base = {k: getattr(engine, k, 0) for k in _COUNTERS}
     if paged:
-        # re-baseline the page stats too: the warmup request's pages are
-        # freed by now, so the measured window starts from live usage
+        # re-baseline the page stats too: the warmup request's private
+        # pages are freed by now (cached prefix pages stay resident), so
+        # the measured window starts from live usage
         alloc_base = engine.page_allocs
         engine.peak_pages = engine.pages_in_use
 
@@ -98,7 +141,7 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
     t0 = time.perf_counter()
     engine.run_to_completion()
     wall = time.perf_counter() - t0
-    c = {k: getattr(engine, k) - base[k] for k in _COUNTERS}
+    c = {k: getattr(engine, k, 0) - base[k] for k in _COUNTERS}
     total_tokens = c["tokens_emitted"] + c["prompt_tokens_ingested"]
     out = {
         "dispatch_mode": engine.dispatch_mode,  # paged runs the fused path
@@ -109,16 +152,24 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
         "prompt_tokens_per_prefill_dispatch": round(
             c["prompt_tokens_ingested"] / max(c["prefill_dispatches"], 1), 2
         ),
+        # emitted tokens per request, for the byte-identity gates
+        "outputs": {r.uid: list(r.output) for r in engine.finished
+                    if not r.uid.startswith("__")},
     }
     if paged:
         out.update(
             cache_mode="paged",
+            prefix_cache=prefix_cache,
             page_size=engine.page_size,
             total_pages=engine.n_pages,
             pages_in_use_peak=engine.peak_pages,
             page_allocs=engine.page_allocs - alloc_base,
             peak_cache_bytes=engine.peak_cache_bytes,
             dense_cache_bytes=engine.dense_cache_bytes,
+            pages_shared_peak=engine.pages_shared_peak,
+            cow_copies=engine.cow_copies,
+            prefix_evictions=engine.prefix_evictions,
+            preemptions=engine.preemptions,
         )
     else:
         out.update(cache_mode="dense", peak_cache_bytes=engine.peak_cache_bytes)
@@ -167,6 +218,9 @@ def main(argv=None) -> int:
     results = {}
     for mode in modes:
         reqs = ragged_requests(n_requests, max_new)
+        # the ragged paged run keeps prefix_cache=False: random prompts
+        # share nothing, and this keeps it the PR 2 per-slot baseline the
+        # schedule-equality gate below compares against
         results[mode] = run_engine(
             model, params, reqs, mode=mode,
             max_batch=max_batch, max_len=max_len, prefill_chunk=prefill_chunk,
@@ -184,6 +238,53 @@ def main(argv=None) -> int:
             f"(decode={r['decode_dispatches']} prefill={r['prefill_dispatches']})"
             + extra
         )
+
+    # ---------------------------------------------- shared-prefix scenario
+    shared_results = {}
+    shared_scenario = {}
+    if model.supports_paged_cache:
+        sp_requests = 6 if args.smoke else n_requests
+        sp_batch = 2 if args.smoke else max_batch
+        sp_prefix = 32 if args.smoke else 64
+        sp_tail = 4 if args.smoke else 8
+        _, sp_sys = shared_prefix_requests(
+            sp_requests, max_new, prefix_len=sp_prefix, tail_len=sp_tail
+        )
+        sp_pages_per_req = -(-(sp_prefix + sp_tail + max_new) // page_size)
+        sp_total_pages = sp_batch * sp_pages_per_req
+        shared_scenario = {
+            "n_requests": sp_requests, "max_new_tokens": max_new,
+            "max_batch": sp_batch, "max_len": max_len,
+            "prefill_chunk": prefill_chunk, "page_size": page_size,
+            "total_pages": sp_total_pages,
+            "prefix_len": sp_prefix, "tail_len": sp_tail, "primed": True,
+        }
+        for name, kwargs in (
+            ("fused", {}),
+            ("paged", dict(page_size=page_size, total_pages=sp_total_pages)),
+            ("paged_prefix", dict(page_size=page_size, total_pages=sp_total_pages,
+                                  prefix_cache=True)),
+        ):
+            # fresh Request objects per engine (outputs accumulate in place)
+            reqs, _ = shared_prefix_requests(
+                sp_requests, max_new, prefix_len=sp_prefix, tail_len=sp_tail
+            )
+            shared_results[name] = run_engine(
+                model, params, reqs,
+                mode="paged" if name.startswith("paged") else name,
+                max_batch=sp_batch, max_len=max_len,
+                prefill_chunk=prefill_chunk, prime=sp_sys, **kwargs,
+            )
+            r = shared_results[name]
+            print(
+                f"[bench_serving] shared/{name:12s} tokens/s="
+                f"{r['tokens_per_sec']:8.1f} "
+                f"prompt_tokens={r['prompt_tokens_ingested']} "
+                f"skipped={r.get('prompt_tokens_skipped', 0)} "
+                f"peak_cache={r['peak_cache_bytes'] / 1024:.0f}KiB"
+                + (f" shared_pages_peak={r['pages_shared_peak']}"
+                   if name == "paged_prefix" else "")
+            )
 
     report = {
         "arch": args.arch,
@@ -210,12 +311,35 @@ def main(argv=None) -> int:
             / max(results["paged"]["peak_cache_bytes"], 1), 2
         )
         report["paged_tokens_per_sec_vs_fused"] = round(paged_speed, 3)
+    if shared_results:
+        sp, spp = shared_results["paged"], shared_results["paged_prefix"]
+        report["shared_prefix"] = {
+            "scenario": shared_scenario,
+            "engines": shared_results,
+            "prefill_reduction": round(
+                sp["prompt_tokens_ingested"]
+                / max(spp["prompt_tokens_ingested"], 1), 2
+            ),
+            "peak_reduction_vs_paged": round(
+                sp["peak_cache_bytes"] / max(spp["peak_cache_bytes"], 1), 2
+            ),
+        }
+
+    # the byte-identity gates compare full output dicts; keep them out of
+    # the written report (per-request token lists, not metrics)
+    outputs = {}
+    for prefix, group in (("", results), ("shared/", shared_results)):
+        for name, r in group.items():
+            outputs[prefix + name] = r.pop("outputs")
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"[bench_serving] wrote {args.out} "
           f"(dispatch reduction {report['dispatch_reduction']}x"
           + (f", paged cache reduction {report['paged_cache_reduction']}x, "
              f"paged speed {paged_speed:.2f}x fused" if "paged" in results else "")
+          + (f", shared-prefix prefill reduction "
+             f"{report['shared_prefix']['prefill_reduction']}x"
+             if shared_results else "")
           + ")")
 
     # the whole point of the fused engine: strictly fewer dispatches/token
@@ -227,18 +351,42 @@ def main(argv=None) -> int:
         if results["paged"]["peak_cache_bytes"] >= results["paged"]["dense_cache_bytes"]:
             print("[bench_serving] REGRESSION: paged peak not below dense reservation")
             return 1
-        # parity in output quality: paged must emit the same token counts
-        # on the same dispatch schedule (full per-token output parity is
-        # tests/test_serving_paged.py's job)
+        # parity in output quality: paged must emit byte-identical tokens
+        # on the same dispatch schedule
         if (results["paged"]["dispatches_per_token"] != results["fused"]["dispatches_per_token"]
-                or results["paged"]["tokens_emitted"] != results["fused"]["tokens_emitted"]
-                or results["paged"]["dispatches"] != results["fused"]["dispatches"]):
+                or results["paged"]["dispatches"] != results["fused"]["dispatches"]
+                or outputs["paged"] != outputs["fused"]):
             print("[bench_serving] REGRESSION: paged schedule/output diverged from fused")
             return 1
         # wall-clock gate only outside smoke (CI boxes are too noisy)
         if not args.smoke and paged_speed < 0.9:
             print(f"[bench_serving] REGRESSION: paged tokens/sec {paged_speed:.2f}x "
                   "fused (< 0.9)")
+            return 1
+    if shared_results:
+        sp = report["shared_prefix"]
+        # prefix sharing must never change emitted tokens...
+        if not (outputs["shared/fused"] == outputs["shared/paged"]
+                == outputs["shared/paged_prefix"]):
+            print("[bench_serving] REGRESSION: shared-prefix outputs diverged "
+                  "from the dense fused engine")
+            return 1
+        # ...must actually hit (and skip) the shared system prompt...
+        if (shared_results["paged_prefix"]["prompt_tokens_skipped"] <= 0
+                or shared_results["paged_prefix"]["prefix_hit_tokens"] <= 0):
+            print("[bench_serving] REGRESSION: shared-prefix scenario had a "
+                  "0% prefix hit rate")
+            return 1
+        # ...>= 2x fewer prompt tokens prefilled than the per-slot paged
+        # engine, at a strictly lower cache peak (pages stored once)
+        if sp["prefill_reduction"] < 2.0:
+            print(f"[bench_serving] REGRESSION: prefill reduction "
+                  f"{sp['prefill_reduction']}x < 2x")
+            return 1
+        if (shared_results["paged_prefix"]["peak_cache_bytes"]
+                >= shared_results["paged"]["peak_cache_bytes"]):
+            print("[bench_serving] REGRESSION: prefix-cache peak not below "
+                  "the per-slot paged peak")
             return 1
     return 0
 

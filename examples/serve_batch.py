@@ -32,10 +32,15 @@ def main() -> int:
     rt = DSRuntime(cfg, store_root=os.path.join(workdir, "store"))
     rt.setup()
 
+    # batch2 shares an 8-token system prefix across its requests: with the
+    # paged prefix cache the shared pages are prefilled once and stitched
+    # into later requests' page tables (prompt_tokens_skipped > 0)
+    sys_prompt = [101, 102, 103, 104, 105, 106, 107, 108]
     batches = [
         {"prompts": [[1, 2, 3], [4, 5, 6, 7], [11]], "output_prefix": "serve/batch0"},
         {"prompts": [[8, 9], [10, 11, 12]], "output_prefix": "serve/batch1"},
-        {"prompts": [[99, 98, 97, 96, 95]], "output_prefix": "serve/batch2"},
+        {"prompts": [sys_prompt + [31], sys_prompt + [32], sys_prompt + [33]],
+         "output_prefix": "serve/batch2"},
     ]
     rt.submit_job(
         JobFile(
@@ -52,13 +57,12 @@ def main() -> int:
                 "dispatch_mode": "fused",
                 # paged KV cache: memory scales with resident tokens, not
                 # max_batch * max_len; RESULTS.json gains peak_cache_bytes.
-                # total_pages sizes the pool to actual demand (longest
-                # request = 5 prompt + 6 new = 11 tokens -> 2 pages/slot,
-                # vs the 8-page/slot dense reservation) — without it the
-                # pool silently defaults to dense size
+                # total_pages is omitted, so each worker sizes its pool
+                # adaptively from the queue depth at submit (logged); the
+                # prefix cache (on by default) shares the system-prompt
+                # pages across batch2's requests instead of re-prefilling
                 "cache_mode": "paged",
                 "page_size": 8,
-                "total_pages": 6,
             },
             groups=batches,
         )
@@ -79,8 +83,10 @@ def main() -> int:
             f"prefill={res['prefill_dispatches']} "
             f"dispatches/token={res['dispatches'] / toks:.2f} "
             f"prompt_tokens_ingested={res['prompt_tokens_ingested']} "
+            f"prompt_tokens_skipped={res['prompt_tokens_skipped']} "
             f"peak_cache={res['peak_cache_bytes']}B "
-            f"(dense would reserve {res['dense_cache_bytes']}B)"
+            f"(dense would reserve {res['dense_cache_bytes']}B, "
+            f"pool={res['total_pages']} pages)"
         )
     return 0
 

@@ -37,8 +37,11 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
     paged_kwargs = {}
     if cache_mode == "paged":
         paged_kwargs["page_size"] = int(job.get("page_size", 16))
+        # omitted total_pages => the engine sizes the pool adaptively from
+        # the queue depth at submit (and logs the chosen size)
         if job.get("total_pages"):
             paged_kwargs["total_pages"] = int(job["total_pages"])
+        paged_kwargs["prefix_cache"] = bool(job.get("prefix_cache", True))
     stop = job.get("stop_token")
     engine = ServeEngine(
         model,
@@ -78,6 +81,14 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
             pages_in_use_peak=engine.peak_pages,
             peak_cache_bytes=engine.peak_cache_bytes,
             dense_cache_bytes=engine.dense_cache_bytes,
+            total_pages=engine.n_pages,
+            prefix_hit_tokens=engine.prefix_hit_tokens,
+            prompt_tokens_skipped=engine.prompt_tokens_skipped,
+            pages_shared_peak=engine.pages_shared_peak,
+            cow_copies=engine.cow_copies,
+            prefix_evictions=engine.prefix_evictions,
+            preemptions=engine.preemptions,
+            tokens_discarded=engine.tokens_discarded,
         )
     ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **dispatch_stats})
     return {"n_requests": len(finished), **dispatch_stats}

@@ -326,7 +326,13 @@ def _paged_gqa(
     """Attention against the paged cache: Pallas flash kernel through the
     page table, or the jnp fallback (gather pages -> dense ``gqa_attention``,
     byte-identical math to the dense cache path so paged and dense engines
-    stay token-parity)."""
+    stay token-parity).
+
+    Page-table entries are pure indirection: several rows may alias the
+    same physical page (shared-prefix stitching), which is transparent to
+    both read paths.  The serving engine guarantees writes never target an
+    aliased page (copy-on-write privatizes it first), so reads here always
+    see immutable shared content."""
     if rt.resolve_paged_attn() == "kernel":
         from repro.kernels import ops as kops
 
@@ -407,7 +413,13 @@ def _attn_extend_paged(
     """Chunk-extend against the paged cache: append T tokens per row and
     attend each query through the page table.  Padded tokens write to the
     out-of-bounds page sentinel (dropped); their garbage outputs are
-    discarded by the caller's last-valid-token gather."""
+    discarded by the caller's last-valid-token gather.
+
+    ``positions`` may start at any page-aligned (or, after a shared-prefix
+    full hit, mid-page copy-on-write) offset: RoPE uses the absolute
+    positions and earlier pages — possibly written by a *different* row
+    that shares the prefix — are visible through the table, so prefill can
+    resume mid-sequence from the first divergent chunk."""
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     b, T, _ = x.shape
     q, k, v = qkv_project(p, x, h, hkv, hd)

@@ -44,6 +44,19 @@ hardware, not by dispatch count):
   straight off the mask instead of re-deriving the stop condition, and
   finished rows are parked (pages freed) before the next tick's
   dispatch.
+- **shared prefixes**: with ``prefix_cache=True`` (paged mode default)
+  a host-side radix cache (``repro.serving.prefix_cache``) indexes
+  completed prompts' full KV pages by their token chunks.  Admission
+  matches each new prompt against the cache and *stitches* the hit into
+  the slot's page table — the matched pages are referenced (refcount
+  bumped), not recomputed, and prefill resumes from the first divergent
+  chunk.  The allocator is refcount-aware: a page is freed only when its
+  last reference (slots + cache) drops, a slot about to write a page
+  someone else still references gets a private copy first
+  (copy-on-write), and when the pool runs dry the engine evicts LRU
+  unreferenced cached prefixes, then preempts the youngest active slot
+  (its request is requeued and, thanks to the deterministic sampling
+  streams, regenerates byte-identical output) before giving up.
 
 Dispatch accounting: ``decode_dispatches`` / ``prefill_dispatches`` /
 ``dispatches`` (their sum) and ``tokens_emitted`` /
@@ -54,6 +67,7 @@ dispatches-per-token metric.  ``steps_executed`` keeps its seed meaning
 
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -61,7 +75,10 @@ import jax
 import numpy as np
 
 from repro.models import Model
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import make_decode_step, make_prefill_step
+
+_LOG = logging.getLogger(__name__)
 
 
 @dataclass
@@ -86,6 +103,12 @@ class _Slot:
     req: Optional[Request] = None
     pos: int = 0  # next cache position to write
     remaining_prompt: List[int] = field(default_factory=list)
+    # admission order (monotonic): preemption picks the youngest = max seq
+    seq: int = -1
+    # prefix-cache stitch accounting for THIS admission (rolled back if
+    # the slot is preempted, so counters never double-count a rerun)
+    hit_tokens: int = 0
+    skipped_tokens: int = 0
 
 
 class ServeEngine:
@@ -104,6 +127,7 @@ class ServeEngine:
         cache_mode: str = "dense",
         page_size: int = 16,
         total_pages: Optional[int] = None,
+        prefix_cache: bool = True,
     ):
         if dispatch_mode not in ("fused", "grouped"):
             raise ValueError(f"dispatch_mode must be fused|grouped, got {dispatch_mode!r}")
@@ -135,38 +159,39 @@ class ServeEngine:
         self.page_size = int(page_size)
         if cache_mode == "paged":
             self.pages_per_slot = -(-max_len // self.page_size)
-            dense_pages = max_batch * self.pages_per_slot
-            self.n_pages = int(total_pages) if total_pages else dense_pages
-            self.cache = model.init_cache(
-                max_batch, max_len,
-                paged=True, page_size=self.page_size, n_pages=self.n_pages,
-            )
-            # host-side allocator: free list + per-slot page lists + the
-            # numpy shadow of the device page table (OOB sentinel = free)
-            self._free_pages = list(range(self.n_pages))
-            self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
-            self._table = np.full(
-                (max_batch, self.pages_per_slot), self.n_pages, np.int32
-            )
-            self._table_dirty = True
-            # bytes of ONE page across every layer and pool leaf (k+v, or
-            # the MLA latent pool) — peak_cache_bytes = peak_pages * this
-            self.page_bytes = sum(
-                leaf.size * leaf.dtype.itemsize // self.n_pages
-                for name, leaf in self.cache.items()
-                if name.endswith("_pages")
-            )
-            self.dense_cache_bytes = dense_pages * self.page_bytes
+            self.prefix = PrefixCache(self.page_size) if prefix_cache else None
             self.pages_in_use = 0
             self.peak_pages = 0
             self.page_allocs = 0  # lifetime allocations (> n_pages => reuse)
+            # prefix-sharing / recovery accounting
+            self.prefix_hit_tokens = 0  # prompt tokens found in the cache
+            self.prompt_tokens_skipped = 0  # of those, never dispatched
+            self.pages_shared_peak = 0  # max pages with refcount > 1
+            self.cow_copies = 0
+            self.prefix_evictions = 0
+            self.preemptions = 0
+            self.tokens_discarded = 0  # preempted work (re-earned on rerun)
+            self._shared_pages = 0  # pages with refcount > 1, kept O(1)
+            self.page_bytes = 0
+            self.dense_cache_bytes = 0
+            self._adaptive = not total_pages
+            if total_pages:
+                self._init_paged_pool(int(total_pages))
+            else:
+                # sized adaptively from queue depth at first submit (and
+                # grown, up to the dense reservation, on later submits)
+                self.n_pages: Optional[int] = None
+                self.cache = None
         else:
+            self.prefix = None
             self.cache = model.init_cache(max_batch, max_len)
         self.slots = [_Slot() for _ in range(max_batch)]
         self.pending: List[Request] = []
         self.finished: List[Request] = []
         self.rng = np.random.default_rng(rng_seed)
+        self._rng_seed = rng_seed
         self._n_submitted = 0
+        self._admit_seq = 0
         self._decode = jax.jit(make_decode_step(model, rng_seed, sample_on_device))
         self._use_prefill = (
             dispatch_mode == "fused"
@@ -189,9 +214,97 @@ class ServeEngine:
 
     def _cache_is_rolling(self) -> bool:
         """Sliding-window KV caches wrap writes mod t; right-padded prefill
-        chunks could then alias still-visible slots — decode-path ingest."""
+        chunks could then alias still-visible slots — decode-path ingest.
+        (Paged caches are never rolling; an adaptively-sized pool may not
+        exist yet, which is fine for this check.)"""
         k = self.cache.get("k") if isinstance(self.cache, dict) else None
         return k is not None and k.shape[2] < self.max_len
+
+    def _init_paged_pool(self, total_pages: Optional[int]) -> None:
+        """Create the device page pool and the host-side allocator state.
+
+        ``total_pages=None`` sizes the pool adaptively from the queue at
+        first submit: enough pages for the ``min(max_batch, queue depth)``
+        largest queued requests (prompt + new-token budget, in whole
+        pages) plus one request's worth of headroom for retained cached
+        prefixes, clamped between one request and the dense reservation.
+        """
+        dense_pages = self.max_batch * self.pages_per_slot
+        if total_pages is None:
+            total_pages = self._adaptive_pages()
+            _LOG.info(
+                "paged pool sized adaptively: %d pages of %d tokens "
+                "(queue depth %d, max_batch %d, dense reservation %d pages)",
+                total_pages, self.page_size, len(self.pending), self.max_batch,
+                dense_pages,
+            )
+        self.n_pages = int(total_pages)
+        self.cache = self.model.init_cache(
+            self.max_batch, self.max_len,
+            paged=True, page_size=self.page_size, n_pages=self.n_pages,
+        )
+        # host-side allocator: free list + per-page refcounts + per-slot
+        # page lists + the numpy shadow of the device page table (OOB
+        # sentinel = unbacked)
+        self._free_pages = list(range(self.n_pages))
+        self._page_refs = [0] * self.n_pages
+        self._slot_pages: List[List[int]] = [[] for _ in range(self.max_batch)]
+        self._table = np.full(
+            (self.max_batch, self.pages_per_slot), self.n_pages, np.int32
+        )
+        self._table_dirty = True
+        # bytes of ONE page across every layer and pool leaf (k+v, or
+        # the MLA latent pool) — peak_cache_bytes = peak_pages * this
+        self.page_bytes = sum(
+            leaf.size * leaf.dtype.itemsize // self.n_pages
+            for name, leaf in self.cache.items()
+            if name.endswith("_pages")
+        )
+        self.dense_cache_bytes = dense_pages * self.page_bytes
+
+    def _adaptive_pages(self) -> int:
+        """Pool size for the current queue: pages for the
+        ``min(max_batch, queue depth)`` largest queued requests (prompt +
+        new-token budget, whole pages) + one request of headroom for
+        retained prefixes + pages already resident, clamped between one
+        request and the dense reservation."""
+        ps = self.page_size
+        dense_pages = self.max_batch * self.pages_per_slot
+        demands = [
+            min(self.pages_per_slot, -(-(len(r.prompt) + r.max_new_tokens) // ps))
+            for r in self.pending
+        ] or [self.pages_per_slot]
+        per_req = max(demands)
+        conc = max(1, min(self.max_batch, len(self.pending)))
+        want = sum(sorted(demands)[-conc:]) + per_req + self.pages_in_use
+        return max(per_req, min(dense_pages, want))
+
+    def _grow_pool(self, new_n: int) -> None:
+        """Extend an adaptively-sized pool in place (later submits may
+        queue larger requests than the first sizing saw).  Existing pages
+        keep their ids; the OOB sentinel moves from old to new ``n_pages``
+        in the table shadow and is re-pushed before the next dispatch.
+        Growing changes the pool leaves' shapes, so the next dispatch
+        retraces the jitted step — the submit path grows in geometric
+        steps to bound how often that compile cliff is paid."""
+        import jax.numpy as jnp
+
+        old = self.n_pages
+        for name, leaf in self.cache.items():
+            if name.endswith("_pages"):
+                pad = jnp.zeros(
+                    leaf.shape[:1] + (new_n - old,) + leaf.shape[2:], leaf.dtype
+                )
+                self.cache[name] = jnp.concatenate([leaf, pad], axis=1)
+        self.n_pages = new_n
+        self._free_pages.extend(range(old, new_n))
+        self._page_refs.extend([0] * (new_n - old))
+        self._table[self._table == old] = new_n
+        self._table_dirty = True
+        _LOG.info(
+            "paged pool grown adaptively: %d -> %d pages (queue depth %d)",
+            old, new_n, len(self.pending),
+        )
 
     # ------------------------------------------------------- page allocator
     @property
@@ -204,10 +317,89 @@ class ServeEngine:
             )
         return self.peak_pages * self.page_bytes
 
-    def _ensure_pages(self, row: int, n_tokens: int) -> None:
+    def _incref(self, pid: int) -> None:
+        """Add a reference (stitch / cache adoption), tracking the shared
+        high-water mark at the 1 -> 2 transition."""
+        self._page_refs[pid] += 1
+        if self._page_refs[pid] == 2:
+            self._shared_pages += 1
+            if self._shared_pages > self.pages_shared_peak:
+                self.pages_shared_peak = self._shared_pages
+
+    def _decref(self, pid: int) -> None:
+        """Drop one reference; the page returns to the free list only when
+        its last holder (slot or prefix cache) lets go."""
+        self._page_refs[pid] -= 1
+        if self._page_refs[pid] < 0:  # allocator invariant
+            raise AssertionError(f"page {pid} refcount went negative")
+        if self._page_refs[pid] == 1:
+            self._shared_pages -= 1
+        elif self._page_refs[pid] == 0:
+            self._free_pages.append(pid)  # LIFO: reuse hot pages
+            self.pages_in_use -= 1
+
+    def _alloc_page(self, row: int) -> Optional[int]:
+        """Claim a free page for ``row`` (refcount 1).
+
+        On exhaustion, recover in escalating order: evict LRU cached
+        prefixes nobody maps, then preempt the youngest active slot
+        (requeueing its request — deterministic sampling streams make the
+        rerun byte-identical).  If the youngest is ``row`` itself it is
+        parked in favor of older slots and ``None`` is returned; the
+        caller must drop the row from this tick.  Raises only when a
+        lone request cannot fit in the entire pool.
+        """
+        while not self._free_pages:
+            if self.prefix is not None:
+                evicted = self.prefix.evict(1, lambda p: self._page_refs[p])
+                if evicted:
+                    for pid in evicted:
+                        self._decref(pid)  # cache ownership -> free list
+                    self.prefix_evictions += len(evicted)
+                    continue
+            victim = None
+            for i, s in enumerate(self.slots):
+                if s.req is not None and (victim is None or s.seq > self.slots[victim].seq):
+                    victim = i
+            others_active = any(
+                s.req is not None for j, s in enumerate(self.slots) if j != row
+            )
+            if victim is None or (victim == row and not others_active):
+                raise RuntimeError(
+                    f"paged KV pool exhausted ({self.n_pages} pages of "
+                    f"{self.page_size} tokens) with nothing evictable or "
+                    "preemptable; raise total_pages or lower request length"
+                )
+            self._preempt(victim)
+            if victim == row:
+                return None
+        pid = self._free_pages.pop()
+        self._page_refs[pid] = 1
+        self.pages_in_use += 1
+        self.page_allocs += 1
+        return pid
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Copy-on-write: duplicate one physical page across every layer
+        and pool leaf (one device op per leaf, outside the jitted step)."""
+        for name, leaf in self.cache.items():
+            if name.endswith("_pages"):
+                self.cache[name] = leaf.at[:, dst].set(leaf[:, src])
+
+    def _ensure_pages(
+        self, row: int, n_tokens: int, write_start: Optional[int] = None
+    ) -> bool:
         """Back row ``row``'s first ``n_tokens`` positions with physical
         pages (allocate-on-write, called ahead of every dispatch that will
-        write those positions)."""
+        write those positions).
+
+        ``write_start`` marks the first position the coming dispatch will
+        write: any page in the write range that another holder (a sharing
+        slot or the prefix cache) still references is copied to a private
+        page first, so shared pages are immutable once published.  Returns
+        False if ``row`` itself was preempted while recovering pool space
+        (the caller must drop the row from this tick's dispatch).
+        """
         need = -(-n_tokens // self.page_size)
         if need > self.pages_per_slot:
             raise ValueError(
@@ -216,32 +408,131 @@ class ServeEngine:
                 f"of {self.page_size} tokens"
             )
         pages = self._slot_pages[row]
+        shortfall = (need - len(pages)) - len(self._free_pages)
+        if write_start is not None:
+            # the CoW pass below will also allocate one page per shared
+            # page in the write range — count those into the bulk reclaim
+            shortfall += sum(
+                1
+                for j in range(min(write_start // self.page_size, len(pages)),
+                               min(need, len(pages)))
+                if self._page_refs[pages[j]] > 1
+            )
+        if shortfall > 0 and self.prefix is not None:
+            # bulk pre-eviction: reclaim the whole shortfall in one radix
+            # pass instead of one tree walk per page inside _alloc_page
+            evicted = self.prefix.evict(shortfall, lambda p: self._page_refs[p])
+            for pid in evicted:
+                self._decref(pid)
+            self.prefix_evictions += len(evicted)
         while len(pages) < need:
-            if not self._free_pages:
-                raise RuntimeError(
-                    f"paged KV pool exhausted ({self.n_pages} pages of "
-                    f"{self.page_size} tokens); raise total_pages or lower "
-                    "concurrency"
-                )
-            pid = self._free_pages.pop()
+            pid = self._alloc_page(row)
+            if pid is None:
+                return False
             self._table[row, len(pages)] = pid
             pages.append(pid)
-            self.pages_in_use += 1
-            self.page_allocs += 1
             self._table_dirty = True
+        if write_start is not None:
+            for j in range(write_start // self.page_size, need):
+                old = pages[j]
+                if self._page_refs[old] > 1:  # shared: copy before write
+                    new = self._alloc_page(row)
+                    if new is None:
+                        return False
+                    self._copy_page(old, new)
+                    self._decref(old)  # still >= 1: another slot / the cache
+                    pages[j] = new
+                    self._table[row, j] = new
+                    self._table_dirty = True
+                    self.cow_copies += 1
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return True
 
-    def _free_slot_pages(self, row: int) -> None:
-        """Free-on-finish: return the slot's pages to the pool and reset
-        its table row to the OOB sentinel (stale writes become no-ops)."""
+    def _release_slot_pages(self, row: int) -> None:
+        """Drop the slot's references (free-on-finish for private pages;
+        shared/cached pages stay resident) and reset its table row to the
+        OOB sentinel so stale writes become no-ops."""
         pages = self._slot_pages[row]
         if not pages:
             return
-        self._free_pages.extend(reversed(pages))  # LIFO: reuse hot pages
-        self.pages_in_use -= len(pages)
+        for pid in reversed(pages):
+            self._decref(pid)
         self._slot_pages[row] = []
         self._table[row, :] = self.n_pages
         self._table_dirty = True
+
+    def _preempt(self, row: int) -> None:
+        """Pool-pressure recovery: release the slot and requeue its request
+        at the queue front.  Any generated tokens are discarded — the
+        per-request sampling stream replays them identically on rerun.
+
+        Delivery counters are rolled back to what the rerun will re-earn
+        (the discarded work lands in ``tokens_discarded`` instead), so
+        ``tokens_emitted`` always equals tokens actually delivered and the
+        paged-vs-dense parity gates stay exact across preemptions."""
+        slot = self.slots[row]
+        req = slot.req
+        self._release_slot_pages(row)
+        emitted = len(req.output)
+        ingested = min(slot.pos, len(req.prompt)) - slot.skipped_tokens
+        self.tokens_emitted -= emitted
+        self.prompt_tokens_ingested -= ingested
+        self.tokens_discarded += emitted + ingested
+        self.prefix_hit_tokens -= slot.hit_tokens
+        self.prompt_tokens_skipped -= slot.skipped_tokens
+        req.output = []
+        req.done = False
+        slot.req = None
+        slot.pos = 0
+        slot.remaining_prompt = []
+        slot.hit_tokens = 0
+        slot.skipped_tokens = 0
+        self.pending.insert(0, req)
+        self.preemptions += 1
+
+    # --------------------------------------------------------- prefix cache
+    def _stitch_prefix(self, row: int) -> None:
+        """Admission-time prefix reuse: map the longest cached prefix of
+        the new request's prompt straight into its page table and skip
+        prefill for those tokens.  At least one prompt token is always
+        held back and re-dispatched — its logits seed generation — so a
+        full-prompt hit re-writes one position inside the last shared
+        page, which copy-on-write then privatizes."""
+        slot = self.slots[row]
+        prompt = slot.req.prompt
+        path = self.prefix.match(prompt)[: self.pages_per_slot]
+        matched = len(path) * self.page_size
+        eff = min(matched, len(prompt) - 1)
+        if eff <= 0:
+            return
+        pages = self._slot_pages[row]
+        for j, node in enumerate(path):
+            self._incref(node.page)
+            self._table[row, j] = node.page
+            pages.append(node.page)
+        self._table_dirty = True
+        slot.pos = eff
+        slot.remaining_prompt = list(prompt[eff:])
+        slot.hit_tokens = matched
+        slot.skipped_tokens = eff
+        self.prefix_hit_tokens += matched
+        self.prompt_tokens_skipped += eff
+
+    def _prefix_insert(self, row: int) -> None:
+        """Publish a freshly-ingested prompt's full pages to the radix
+        cache (called the moment the prompt is fully resident, before the
+        row can finish and release them).  Chunks already cached keep the
+        cache's page; only newly adopted pages gain the cache's ref."""
+        if self.prefix is None:
+            return
+        slot = self.slots[row]
+        prompt = slot.req.prompt
+        n_full = min(len(prompt) // self.page_size, len(self._slot_pages[row]))
+        if n_full == 0:
+            return
+        adopted = self.prefix.insert(prompt, self._slot_pages[row][:n_full])
+        for pid in adopted:
+            self._incref(pid)
 
     def _push_table(self) -> None:
         """Sync the host page table to the device cache before a dispatch."""
@@ -257,6 +548,23 @@ class ServeEngine:
             r.sample_stream = self._n_submitted
             self._n_submitted += 1
         self.pending.extend(reqs)
+        if self.cache_mode == "paged" and self._adaptive and self.pending:
+            # adaptive pool sizing deferred to first (non-empty) submit so
+            # the queue depth is known (satellite: the caller no longer
+            # guesses); later submits can only GROW the pool, up to the
+            # dense reservation — never strand a bigger-than-pool request
+            if self.cache is None:
+                self._init_paged_pool(None)
+            else:
+                want = self._adaptive_pages()
+                if want > self.n_pages:
+                    # geometric step (>= 1.5x) so a stream of growing jobs
+                    # pays O(log) recompiles, not one per submit
+                    dense_pages = self.max_batch * self.pages_per_slot
+                    self._grow_pool(
+                        min(dense_pages,
+                            max(want, self.n_pages + -(-self.n_pages // 2)))
+                    )
 
     def _refill(self) -> None:
         for row, slot in enumerate(self.slots):
@@ -264,11 +572,17 @@ class ServeEngine:
                 req = self.pending.pop(0)
                 slot.req = req
                 slot.pos = 0
+                slot.seq = self._admit_seq
+                self._admit_seq += 1
                 slot.remaining_prompt = list(req.prompt)
+                slot.hit_tokens = 0
+                slot.skipped_tokens = 0
                 # row identity comes from ENUMERATION — _Slot is a value-
                 # comparing dataclass, so slots.index(slot) can return a
                 # different-but-equal slot and zero the wrong row
                 self._reset_row(row)
+                if self.prefix is not None:
+                    self._stitch_prefix(row)
 
     def _reset_row(self, row: int) -> None:
         if self.cache_mode == "paged":
@@ -318,6 +632,15 @@ class ServeEngine:
         emitted = 0
         B, C = self.max_batch, self.prefill_chunk
         while True:
+            if self.cache_mode == "paged":
+                # reservation pass BEFORE building dispatch inputs: CoW /
+                # eviction / preemption all mutate slot state, and a later
+                # row's allocation may park an earlier one — the rows list
+                # below is computed only after every survivor holds pages
+                for i, s in enumerate(self.slots):
+                    if s.req is not None and s.remaining_prompt:
+                        n = min(C, len(s.remaining_prompt))
+                        self._ensure_pages(i, s.pos + n, write_start=s.pos)
             rows = [
                 i for i, s in enumerate(self.slots) if s.req is not None and s.remaining_prompt
             ]
@@ -342,8 +665,6 @@ class ServeEngine:
                 if slot.req.stop_token is not None:
                     stops[i] = slot.req.stop_token
                 max_news[i] = slot.req.max_new_tokens
-                if self.cache_mode == "paged":
-                    self._ensure_pages(i, slot.pos + n)
             self._push_table()
             if self.sample_on_device:
                 nxt, done, self.cache = self._prefill(
@@ -366,11 +687,19 @@ class ServeEngine:
                 slot.pos += n
                 self.prompt_tokens_ingested += n
                 if not slot.remaining_prompt:
+                    # prompt fully resident: publish its full pages to the
+                    # prefix cache BEFORE accept (which may finish the row
+                    # and drop its references)
+                    self._prefix_insert(i)
                     # the chunk's last-token logits seed generation
                     tok = (
                         int(nxt[i])
                         if nxt is not None
-                        else self._host_sample(lg[i], slot.req.temperature)
+                        else self._host_sample(
+                            lg[i], slot.req.temperature,
+                            stream=slot.req.sample_stream,
+                            step=len(slot.req.output),
+                        )
                     )
                     self._accept_token(i, tok, bool(done[i]) if done is not None else None)
                     emitted += 1
@@ -378,6 +707,13 @@ class ServeEngine:
     # -- decode -------------------------------------------------------------
     def _build_decode_inputs(self):
         B = self.max_batch
+        if self.cache_mode == "paged":
+            # reservation pass first (see _ingest_prompts): allocation may
+            # CoW a shared page or preempt a slot, so inputs are built only
+            # from the rows that still hold their pages afterwards
+            for i, s in enumerate(self.slots):
+                if s.req is not None:
+                    self._ensure_pages(i, s.pos + 1, write_start=s.pos)
         tokens = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
@@ -406,8 +742,6 @@ class ServeEngine:
             if slot.req.stop_token is not None:
                 stops[i] = slot.req.stop_token
             max_news[i] = slot.req.max_new_tokens
-            if self.cache_mode == "paged":
-                self._ensure_pages(i, slot.pos + 1)
         return active, tokens, pos, temps, streams, steps, stops, max_news
 
     def _decode_dispatch(
@@ -439,8 +773,17 @@ class ServeEngine:
                 self.prompt_tokens_ingested += 1
                 if slot.remaining_prompt:
                     continue  # still ingesting the prompt
+                # decode-path ingestion just wrote the last prompt token:
+                # publish the prompt's full pages (MoE/MLA archs reach the
+                # prefix cache through this path)
+                self._prefix_insert(i)
             tok = (
-                int(nxt[i]) if nxt is not None else self._host_sample(lg[i], slot.req.temperature)
+                int(nxt[i])
+                if nxt is not None
+                else self._host_sample(
+                    lg[i], slot.req.temperature,
+                    stream=slot.req.sample_stream, step=len(slot.req.output),
+                )
             )
             self._accept_token(i, tok, bool(done[i]) if done is not None else None)
             emitted += 1
@@ -487,19 +830,36 @@ class ServeEngine:
             slot.req = None
             slot.remaining_prompt = []
             if self.cache_mode == "paged":
-                self._free_slot_pages(row)
+                self._release_slot_pages(row)
 
-    def _host_sample(self, lg_row: np.ndarray, temperature: float) -> int:
+    def _host_sample(
+        self,
+        lg_row: np.ndarray,
+        temperature: float,
+        stream: Optional[int] = None,
+        step: Optional[int] = None,
+    ) -> int:
         """Host fallback sampler (``sample_on_device=False``): greedy or
         max-subtracted softmax — ``np.exp(lg / T)`` on raw logits overflows
-        for large-magnitude logits."""
+        for large-magnitude logits.
+
+        When the caller passes the request's ``(stream, step)``, the draw
+        comes from an rng keyed on ``(seed, stream, step)`` — like the
+        on-device path, independent of scheduling, slot assignment, and
+        preemption replays.  Without them (direct/debug calls) it falls
+        back to the engine-level rng."""
         lg = np.asarray(lg_row, np.float64)
         if temperature <= 0:
             return int(np.argmax(lg))
         z = (lg - lg.max()) / temperature
         p = np.exp(z)
         p /= p.sum()
-        return int(self.rng.choice(len(p), p=p))
+        rng = (
+            np.random.default_rng((self._rng_seed, stream, step))
+            if stream is not None
+            else self.rng
+        )
+        return int(rng.choice(len(p), p=p))
 
     def run_to_completion(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0

@@ -1,5 +1,6 @@
 """Tier-1 smoke run of the serving benchmark: a regression in the fused
-engine's dispatch count (the tentpole metric) fails fast on CPU."""
+engine's dispatch count, the paged-cache accounting, or the shared-prefix
+radix cache (hit rate, prefill skipping, token parity) fails fast on CPU."""
 
 import json
 import os
@@ -31,3 +32,15 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     assert paged["dispatches_per_token"] == fused["dispatches_per_token"]
     assert paged["tokens_emitted"] == fused["tokens_emitted"]
     assert report["paged_cache_reduction"] > 1.0
+    # shared-prefix scenario: the radix cache must actually hit (rc=0
+    # above already gates paged-vs-dense token divergence byte-for-byte),
+    # skip >= 2x of the prompt prefill work, and store shared pages once
+    # (lower peak than the per-slot paged engine)
+    sp = report["shared_prefix"]
+    prefix = sp["engines"]["paged_prefix"]
+    assert prefix["prefix_hit_tokens"] > 0
+    assert prefix["prompt_tokens_skipped"] > 0
+    assert prefix["pages_shared_peak"] > 0
+    assert sp["prefill_reduction"] >= 2.0
+    assert prefix["peak_cache_bytes"] < sp["engines"]["paged"]["peak_cache_bytes"]
+    assert prefix["tokens_emitted"] == sp["engines"]["fused"]["tokens_emitted"]

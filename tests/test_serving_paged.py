@@ -97,6 +97,10 @@ def test_paged_isolated_rows_and_refill():
 
 
 def test_paged_pool_exhaustion_raises():
+    """Exhaustion is now recoverable (prefix eviction, then youngest-slot
+    preemption — tests/test_serving_prefix.py), but a request that cannot
+    fit the whole pool must still fail loudly: here every prompt+budget
+    needs 2 pages of a 1-page pool."""
     cfg, model, params = _setup()
     engine = ServeEngine(model, params, max_batch=2, max_len=32,
                          prefill_chunk=4, cache_mode="paged",

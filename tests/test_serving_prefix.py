@@ -1,0 +1,348 @@
+"""Shared-prefix radix cache over the paged KV pool: stitching, CoW,
+refcount invariants, LRU eviction, preemption recovery, adaptive pool
+sizing, and kernel parity with aliased page tables."""
+
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import Model, ModelRuntime
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.prefix_cache import PrefixCache
+
+
+def _setup(arch="ds-paper-100m", seed=0, **rt_kwargs):
+    cfg = reduced(get_arch(arch))
+    model = Model(cfg, ModelRuntime(**rt_kwargs))
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+PREFIX = [11, 12, 13, 14, 15, 16, 17, 18, 21, 22, 23, 24, 25, 26, 27, 28]
+
+
+def _shared_requests(max_new=4, temperature=0.0):
+    """Three prompts over one 16-token (2 pages at ps=8) system prefix:
+    two divergent tails plus one *identical* full-prefix prompt (the
+    full-hit forces the hold-back token's copy-on-write)."""
+    return [
+        Request(uid="a", prompt=PREFIX + [50, 51], max_new_tokens=max_new,
+                temperature=temperature),
+        Request(uid="b", prompt=PREFIX + [60, 61, 62], max_new_tokens=max_new,
+                temperature=temperature),
+        Request(uid="c", prompt=list(PREFIX), max_new_tokens=max_new,
+                temperature=temperature),
+    ]
+
+
+def _run(engine, reqs):
+    engine.submit(reqs)
+    engine.run_to_completion()
+    return {r.uid: r.output for r in engine.finished}
+
+
+# ----------------------------------------------------------- radix unit
+def test_radix_match_insert_evict():
+    pc = PrefixCache(page_size=4)
+    toks = list(range(1, 13))  # 3 full chunks
+    assert pc.match(toks) == []
+    adopted = pc.insert(toks, [7, 8, 9])
+    assert adopted == [7, 8, 9] and pc.n_nodes == 3
+    # re-insert with different pages: first writer wins, nothing adopted
+    assert pc.insert(toks, [1, 2, 3]) == []
+    path = pc.match(toks + [99])  # partial tail ignored
+    assert [n.page for n in path] == [7, 8, 9]
+    # divergent second chunk matches only the first
+    assert [n.page for n in pc.match(toks[:4] + [0, 0, 0, 0])] == [7]
+    # eviction is leaf-first and honors active references
+    refs = {7: 1, 8: 1, 9: 2}  # page 9 (deepest leaf) still mapped by a slot
+    assert pc.evict(5, lambda p: refs[p]) == []  # 9 pinned, 7/8 interior
+    refs[9] = 1
+    assert pc.evict(5, lambda p: refs[p]) == [9, 8, 7]  # leaves inward
+    assert pc.n_nodes == 0
+
+
+# ------------------------------------------------- token parity with CoW
+def test_prefix_sharing_matches_dense_with_cow():
+    """Stitched prefixes + the full-hit hold-back CoW must stay token-
+    parity with the dense fused engine, greedy and seeded temperature."""
+    cfg, model, params = _setup()
+    for temperature in (0.0, 0.7):
+        dense = ServeEngine(model, params, max_batch=2, max_len=32,
+                            prefill_chunk=4, rng_seed=7)
+        want = _run(dense, _shared_requests(temperature=temperature))
+        shared = ServeEngine(model, params, max_batch=2, max_len=32,
+                             prefill_chunk=4, rng_seed=7,
+                             cache_mode="paged", page_size=8, total_pages=10)
+        got = _run(shared, _shared_requests(temperature=temperature))
+        assert got == want, f"temperature={temperature}"
+        assert shared.prefix_hit_tokens > 0
+        assert shared.prompt_tokens_skipped > 0
+        assert shared.cow_copies > 0, "full-prefix hit never exercised CoW"
+
+
+def test_interleaved_shared_prefix_isolation():
+    """Two requests stitched to the SAME physical pages, generating
+    interleaved in one batch, must each match their solo dense run."""
+    cfg, model, params = _setup(seed=3)
+    want = {}
+    for r in _shared_requests(max_new=6)[:2]:
+        solo = ServeEngine(model, params, max_batch=1, max_len=32)
+        want.update(_run(solo, [Request(uid=r.uid, prompt=list(r.prompt),
+                                        max_new_tokens=6)]))
+    eng = ServeEngine(model, params, max_batch=3, max_len=32, prefill_chunk=4,
+                      cache_mode="paged", page_size=8, total_pages=12)
+    # warm the cache so both arrivals stitch the same pages, then run the
+    # two sharers concurrently (same tick admission => aliased tables)
+    _run(eng, [Request(uid="warm", prompt=list(PREFIX), max_new_tokens=1)])
+    got = _run(eng, _shared_requests(max_new=6)[:2])
+    assert got["a"] == want["a"] and got["b"] == want["b"]
+    assert eng.prompt_tokens_skipped >= 2 * (len(PREFIX) - 1)
+    assert eng.pages_shared_peak >= 2
+
+
+def test_prefix_sharing_decode_path_mla():
+    """MoE/MLA archs ingest prompts through the decode path; stitching
+    and publication must work there too (pages of compressed latent)."""
+    cfg, model, params = _setup("deepseek-v2-236b", seed=2)
+    dense = ServeEngine(model, params, max_batch=2, max_len=32, rng_seed=3)
+    want = _run(dense, _shared_requests(max_new=3))
+    paged = ServeEngine(model, params, max_batch=2, max_len=32, rng_seed=3,
+                        cache_mode="paged", page_size=8, total_pages=10)
+    assert not paged._use_prefill  # moe => decode-path ingestion
+    got = _run(paged, _shared_requests(max_new=3))
+    assert got == want
+    assert paged.prompt_tokens_skipped > 0
+
+
+# ------------------------------------------------- allocator invariants
+def test_refcounts_and_drain_baseline():
+    """Refcounts never go negative, and after run_to_completion
+    pages_in_use returns exactly to the cached-prefix baseline (every
+    retained page is indexed by the radix cache with refcount 1)."""
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, prefill_chunk=4,
+                      cache_mode="paged", page_size=8, total_pages=10)
+    _run(eng, _shared_requests())
+    assert all(r >= 0 for r in eng._page_refs)
+    cached = sorted(eng.prefix.pages())
+    assert eng.pages_in_use == len(cached) == eng.prefix.n_nodes > 0
+    assert all(eng._page_refs[p] == 1 for p in cached)
+    # free list + cached pages partition the pool
+    assert sorted(eng._free_pages + cached) == list(range(eng.n_pages))
+    # a second identical batch reuses the retained prefix immediately
+    skipped0 = eng.prompt_tokens_skipped
+    _run(eng, _shared_requests())
+    assert eng.prompt_tokens_skipped > skipped0
+    assert all(r >= 0 for r in eng._page_refs)
+    assert eng.pages_in_use == eng.prefix.n_nodes
+
+
+def test_prefix_cache_disabled_restores_per_slot_drain():
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, prefill_chunk=4,
+                      cache_mode="paged", page_size=8, total_pages=10,
+                      prefix_cache=False)
+    _run(eng, _shared_requests())
+    assert eng.prefix is None and eng.prompt_tokens_skipped == 0
+    assert eng.pages_in_use == 0  # PR 2 free-on-finish semantics
+    assert sorted(eng._free_pages) == list(range(eng.n_pages))
+
+
+def test_lru_eviction_under_pool_pressure():
+    """A pool too small to retain every prefix must evict LRU cached
+    pages (not raise) and stay token-parity with the dense engine."""
+    cfg, model, params = _setup(seed=1)
+    def reqs():
+        # three distinct 8-token (1 page) prefixes; retaining all three
+        # plus a working set of 2 pages cannot fit a 3-page pool, so the
+        # LRU prefix must be evicted mid-run
+        return [
+            Request(uid=f"r{i}", prompt=[100 + (i % 3)] * 8 + [30 + i],
+                    max_new_tokens=4)
+            for i in range(4)
+        ]
+    dense = ServeEngine(model, params, max_batch=1, max_len=32, prefill_chunk=4)
+    want = _run(dense, reqs())
+    tight = ServeEngine(model, params, max_batch=1, max_len=32, prefill_chunk=4,
+                        cache_mode="paged", page_size=8, total_pages=3)
+    got = _run(tight, reqs())
+    assert got == want
+    assert tight.prefix_evictions > 0, "pool pressure never evicted a prefix"
+    assert all(r >= 0 for r in tight._page_refs)
+
+
+def test_preemption_requeues_and_outputs_identical():
+    """Exhaustion beyond eviction preempts the youngest slot; the rerun
+    must be byte-identical (deterministic sampling streams) and every
+    request must still finish."""
+    cfg, model, params = _setup()
+    def reqs():
+        return [Request(uid=f"r{i}", prompt=[10 + i, 20 + i, 30 + i, 40 + i,
+                                             50 + i, 60 + i, 70 + i],
+                        max_new_tokens=6, temperature=0.5) for i in range(4)]
+    dense = ServeEngine(model, params, max_batch=2, max_len=32,
+                        prefill_chunk=4, rng_seed=5)
+    want = _run(dense, reqs())
+    # each request needs 2 pages; 2 slots want 4 — give 3 so slots collide
+    tight = ServeEngine(model, params, max_batch=2, max_len=32,
+                        prefill_chunk=4, rng_seed=5,
+                        cache_mode="paged", page_size=8, total_pages=3)
+    got = _run(tight, reqs())
+    assert got == want
+    assert len(got) == 4
+    assert tight.preemptions > 0, "scenario never forced a preemption"
+    # delivery counters are rolled back at preemption: emitted equals
+    # tokens actually delivered, the thrown-away work is tracked apart
+    assert tight.tokens_emitted == sum(len(o) for o in got.values())
+    assert tight.tokens_emitted == dense.tokens_emitted
+    assert tight.prompt_tokens_ingested <= dense.prompt_tokens_ingested
+    assert tight.tokens_discarded > 0
+
+
+def test_preemption_deterministic_with_host_sampling():
+    """The rerun-is-byte-identical guarantee must hold on the host
+    sampling fallback too: draws are keyed on (seed, stream, step), not
+    on a shared rng whose sequence a preemption would desync."""
+    cfg, model, params = _setup()
+    def reqs():
+        return [Request(uid=f"r{i}", prompt=[10 + i, 20 + i, 30 + i, 40 + i,
+                                             50 + i, 60 + i, 70 + i],
+                        max_new_tokens=6, temperature=0.5) for i in range(4)]
+    dense = ServeEngine(model, params, max_batch=2, max_len=32,
+                        prefill_chunk=4, rng_seed=5, sample_on_device=False)
+    want = _run(dense, reqs())
+    tight = ServeEngine(model, params, max_batch=2, max_len=32,
+                        prefill_chunk=4, rng_seed=5, sample_on_device=False,
+                        cache_mode="paged", page_size=8, total_pages=3)
+    got = _run(tight, reqs())
+    assert got == want
+    assert tight.preemptions > 0, "scenario never forced a preemption"
+
+
+def test_single_oversized_request_still_raises():
+    """Recovery has a floor: a lone request that cannot fit in the whole
+    pool must still fail loudly, not live-lock."""
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, max_batch=2, max_len=32, prefill_chunk=4,
+                      cache_mode="paged", page_size=8, total_pages=1)
+    eng.submit([Request(uid="big", prompt=[1, 2, 3, 4, 5, 6, 7],
+                        max_new_tokens=8)])
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        eng.run_to_completion()
+
+
+# ------------------------------------------------- adaptive pool sizing
+def test_adaptive_total_pages_from_queue(caplog):
+    """Omitting total_pages sizes the pool from the queue at submit,
+    clamped to the dense reservation, and logs the choice."""
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, max_batch=4, max_len=64, prefill_chunk=4,
+                      cache_mode="paged", page_size=8)
+    assert eng.cache is None and eng.n_pages is None
+    dense = ServeEngine(model, params, max_batch=4, max_len=64, prefill_chunk=4)
+    want = _run(dense, _shared_requests())
+    with caplog.at_level(logging.INFO, logger="repro.serving.engine"):
+        got = _run(eng, _shared_requests())
+    assert got == want
+    dense_pages = eng.max_batch * eng.pages_per_slot
+    assert 0 < eng.n_pages < dense_pages  # 3 small requests << dense
+    assert any("sized adaptively" in m for m in caplog.messages)
+    # pool big enough that sizing never forced a preemption here
+    assert eng.preemptions == 0
+
+
+def test_adaptive_pool_grows_for_later_submits(caplog):
+    """A later submit queueing a bigger request than the first sizing saw
+    must grow the pool in place (ids preserved, sentinel re-pushed), not
+    strand the request on the lone-request exhaustion error."""
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, max_batch=2, max_len=64, prefill_chunk=4,
+                      cache_mode="paged", page_size=8)
+    _run(eng, [Request(uid="tiny", prompt=[1, 2, 3], max_new_tokens=2)])
+    small = eng.n_pages
+    big_prompt = list(range(1, 41))  # 40 tokens + 8 new = 6 pages alone
+    dense = ServeEngine(model, params, max_batch=2, max_len=64, prefill_chunk=4)
+    want = _run(dense, [Request(uid="big", prompt=list(big_prompt),
+                                max_new_tokens=8)])
+    with caplog.at_level(logging.INFO, logger="repro.serving.engine"):
+        got = _run(eng, [Request(uid="big", prompt=list(big_prompt),
+                                 max_new_tokens=8)])
+    assert got["big"] == want["big"]
+    assert eng.n_pages > small
+    assert eng.n_pages <= eng.max_batch * eng.pages_per_slot
+    assert any("grown adaptively" in m for m in caplog.messages)
+    assert all(r >= 0 for r in eng._page_refs)
+
+
+# ------------------------------------- aliased page tables, kernel parity
+def test_kernel_matches_jnp_with_aliased_pages():
+    """Two rows whose page tables alias the same physical page (stitched
+    shared prefix) must decode identically through the Pallas kernel
+    (interpret mode on CPU) and the jnp gather fallback — the page-table
+    indirection supports aliasing with no kernel changes."""
+    cfg, model, params = _setup()
+    B, max_len, ps = 2, 32, 8
+    P = max_len // ps
+    n_pages = 6
+    toks = np.asarray([[1, 2, 3, 4, 5, 6, 7, 9]] * 2, np.int32)
+    offs = jnp.zeros((B,), jnp.int32)
+    lens = jnp.full((B,), 8, jnp.int32)
+    outs = {}
+    for impl in ("jnp", "kernel"):
+        m = Model(cfg, ModelRuntime(paged_attn_impl=impl))
+        cache = m.init_cache(B, max_len, paged=True, page_size=ps,
+                             n_pages=n_pages)
+        # row 0 prefills the shared page 2 (both rows' identical first
+        # chunk); row 1's table ALIASES it, plus private pages for the
+        # positions each row writes next
+        table = np.full((B, P), n_pages, np.int32)
+        table[0] = [2, 0, n_pages, n_pages]
+        table[1] = [2, 1, n_pages, n_pages]
+        cache["page_table"] = jnp.asarray(table)
+        # prefill only row 0's copy of the chunk: write goes to page 2
+        # once; row 1 never writes it (stitched semantics)
+        one_row = jnp.asarray([8, 0], jnp.int32)
+        lg, cache = m.prefill_chunk(params, cache, jnp.asarray(toks), offs,
+                                    one_row)
+        # both rows decode the SAME token stream from pos 8: each writes
+        # its private page while reading the shared page-2 history, so
+        # their logits must also agree row-to-row
+        step_logits = []
+        for pos in (8, 9, 10):
+            pv = jnp.full((B,), pos, jnp.int32)
+            nxt = jnp.asarray([[7], [7]], jnp.int32)
+            lg2, cache = m.decode_step(params, cache, nxt, pv)
+            step_logits.append(np.asarray(lg2))
+        outs[impl] = np.stack(step_logits)
+    np.testing.assert_allclose(outs["jnp"], outs["kernel"], rtol=2e-4,
+                               atol=2e-4)
+    # rows saw the same prefix through one physical page: identical
+    # prompts + identical fed tokens => identical logits row-to-row
+    np.testing.assert_allclose(outs["jnp"][:, 0], outs["jnp"][:, 1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_engine_prefix_sharing_on_kernel_impl():
+    """End-to-end: the prefix-sharing engine over the Pallas kernel path
+    (interpret mode) matches the jnp-fallback engine token-for-token."""
+    cfg, model, params = _setup()
+    outs = {}
+    for impl in ("jnp", "kernel"):
+        m = Model(cfg, ModelRuntime(paged_attn_impl=impl))
+        # max_batch=1 => b is admitted after a completes and hits a's
+        # published prefix pages
+        eng = ServeEngine(m, params, max_batch=1, max_len=16, prefill_chunk=4,
+                          cache_mode="paged", page_size=8, total_pages=6)
+        outs[impl] = _run(eng, [
+            Request(uid="a", prompt=[1, 2, 3, 4, 5, 6, 7, 8, 9],
+                    max_new_tokens=3),
+            Request(uid="b", prompt=[1, 2, 3, 4, 5, 6, 7, 8, 10],
+                    max_new_tokens=3),
+        ])
+        assert eng.prompt_tokens_skipped >= 8  # b stitched the first page
+    assert outs["jnp"] == outs["kernel"]
