@@ -29,6 +29,16 @@ baseline (``prompt_tokens_skipped``), and its ``peak_cache_bytes`` must
 come in below the per-slot paged peak (shared pages are stored once,
 not per slot).
 
+The staggered-arrival scenario demonstrates continuous batching: one
+long generation plus short requests arriving one per tick, run under
+``refill_policy="continuous"`` (freed rows admit mid-flight) and the
+``"drain"`` baseline (refill only an empty batch).  Outputs must be
+byte-identical — submit-order sampling streams make scheduling policy
+invisible to content — while continuous batching must show strictly
+lower mean time-to-first-token.  Every scenario additionally records
+queue-wait and TTFT percentiles in engine ticks (deterministic on any
+host, unlike wall-clock).
+
 Reports tokens/sec and dispatches/token per engine to
 ``BENCH_serving.json``::
 
@@ -92,6 +102,29 @@ def shared_prefix_requests(n_requests: int, max_new: int, *, prefix_len: int,
     ], prefix
 
 
+def staggered_requests(n_requests: int, max_new: int, seed: int = 7):
+    """One long-running generation plus short requests trickling in: the
+    head-of-line-blocking shape where continuous batching matters.  A
+    drain-then-refill scheduler strands every later arrival behind the
+    long request; continuous batching cycles them through the freed
+    rows.  Returns (requests, arrival ticks)."""
+    import numpy as np
+
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid="long",
+                    prompt=[int(t) for t in rng.integers(1, 200, size=8)],
+                    max_new_tokens=3 * n_requests)]
+    for i in range(n_requests - 1):
+        n = int(rng.integers(4, 13))
+        reqs.append(Request(uid=f"s{i}",
+                            prompt=[int(t) for t in rng.integers(1, 200, size=n)],
+                            max_new_tokens=max_new))
+    arrivals = [0] + [1 + i for i in range(n_requests - 1)]
+    return reqs, arrivals
+
+
 _COUNTERS = (
     "decode_dispatches", "prefill_dispatches", "dispatches",
     "tokens_emitted", "prompt_tokens_ingested",
@@ -136,6 +169,10 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
         # the measured window starts from live usage
         alloc_base = engine.page_allocs
         engine.peak_pages = engine.pages_in_use
+    # scope the latency samples to the measured window (warmup/prime
+    # requests recorded their own)
+    waits0 = len(engine.scheduler.queue_waits)
+    ttfts0 = len(engine.scheduler.ttfts)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -152,6 +189,9 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
         "prompt_tokens_per_prefill_dispatch": round(
             c["prompt_tokens_ingested"] / max(c["prefill_dispatches"], 1), 2
         ),
+        # queue-wait / time-to-first-token percentiles in engine ticks
+        # (deterministic, unlike wall-clock) for the measured window
+        "timing": engine.scheduler.timing(waits0, ttfts0),
         # emitted tokens per request, for the byte-identity gates
         "outputs": {r.uid: list(r.output) for r in engine.finished
                     if not r.uid.startswith("__")},
@@ -174,6 +214,55 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
     else:
         out.update(cache_mode="dense", peak_cache_bytes=engine.peak_cache_bytes)
     return out
+
+
+def run_staggered(model, params, reqs, arrivals, *, refill_policy: str,
+                  max_batch: int, max_len: int, prefill_chunk: int) -> dict:
+    """Staggered-arrival scenario: requests are submitted at the tick
+    ``arrivals[i]`` says, while the engine is already generating.  The
+    ``continuous`` refill policy admits them into rows the moment one
+    frees; the ``drain`` baseline only refills an empty batch, so late
+    arrivals stack behind the whole in-flight batch.  TTFT/queue-wait
+    are measured in engine ticks (deterministic on any host)."""
+    from repro.serving.engine import Request, ServeEngine
+
+    engine = ServeEngine(
+        model, params, max_batch=max_batch, max_len=max_len,
+        prefill_chunk=prefill_chunk, refill_policy=refill_policy,
+    )
+    engine.submit([Request(uid="__warmup__",
+                           prompt=[1] * max(2 * max(prefill_chunk, 1), 2),
+                           max_new_tokens=2)])
+    engine.run_to_completion()
+    waits0 = len(engine.scheduler.queue_waits)
+    ttfts0 = len(engine.scheduler.ttfts)
+    base_dispatches = engine.dispatches
+
+    schedule = sorted(zip(arrivals, range(len(reqs))))
+    t0 = time.perf_counter()
+    i = 0
+    tick = 0
+    while i < len(schedule) or engine.pending or engine.scheduler.has_active():
+        while i < len(schedule) and schedule[i][0] <= tick:
+            engine.submit([reqs[schedule[i][1]]])
+            i += 1
+        engine.step()
+        tick += 1
+    wall = time.perf_counter() - t0
+    timing = engine.scheduler.timing(waits0, ttfts0)
+    return {
+        "refill_policy": refill_policy,
+        "wall_s": round(wall, 3),
+        "ticks": tick,
+        "dispatches": engine.dispatches - base_dispatches,
+        "tokens_emitted": sum(
+            len(r.output) for r in engine.finished if not r.uid.startswith("__")
+        ),
+        "timing": timing,
+        "mean_ttft_ticks": timing["ttft_ticks"]["mean"],
+        "outputs": {r.uid: list(r.output) for r in engine.finished
+                    if not r.uid.startswith("__")},
+    }
 
 
 def main(argv=None) -> int:
@@ -286,6 +375,34 @@ def main(argv=None) -> int:
                    if name == "paged_prefix" else "")
             )
 
+    # ------------------------------------------- staggered-arrival scenario
+    # continuous batching vs the drain-then-refill baseline: one long
+    # generation plus short requests arriving one per tick
+    st_requests = 8 if args.smoke else 16
+    st_batch = 2 if args.smoke else 4
+    _, st_arrivals = staggered_requests(st_requests, max_new)
+    staggered_results = {}
+    staggered_scenario = {
+        "n_requests": st_requests, "max_new_tokens": max_new,
+        "long_max_new_tokens": 3 * st_requests,
+        "max_batch": st_batch, "max_len": max_len,
+        "prefill_chunk": prefill_chunk, "arrivals": st_arrivals,
+    }
+    for policy in ("continuous", "drain"):
+        reqs, _ = staggered_requests(st_requests, max_new)
+        staggered_results[policy] = run_staggered(
+            model, params, reqs, st_arrivals, refill_policy=policy,
+            max_batch=st_batch, max_len=max_len, prefill_chunk=prefill_chunk,
+        )
+        r = staggered_results[policy]
+        print(
+            f"[bench_serving] staggered/{policy:10s} "
+            f"mean_ttft={r['mean_ttft_ticks']:6.2f} ticks "
+            f"p90={r['timing']['ttft_ticks']['p90']:.0f} "
+            f"queue_wait_p90={r['timing']['queue_wait_ticks']['p90']:.0f} "
+            f"({r['ticks']} ticks total)"
+        )
+
     report = {
         "arch": args.arch,
         "smoke": args.smoke,
@@ -311,6 +428,16 @@ def main(argv=None) -> int:
             / max(results["paged"]["peak_cache_bytes"], 1), 2
         )
         report["paged_tokens_per_sec_vs_fused"] = round(paged_speed, 3)
+    if staggered_results:
+        report["continuous_batching"] = {
+            "scenario": staggered_scenario,
+            "engines": staggered_results,
+            "ttft_reduction": round(
+                staggered_results["drain"]["mean_ttft_ticks"]
+                / max(staggered_results["continuous"]["mean_ttft_ticks"], 1e-9),
+                2,
+            ),
+        }
     if shared_results:
         sp, spp = shared_results["paged"], shared_results["paged_prefix"]
         report["shared_prefix"] = {
@@ -328,7 +455,8 @@ def main(argv=None) -> int:
     # the byte-identity gates compare full output dicts; keep them out of
     # the written report (per-request token lists, not metrics)
     outputs = {}
-    for prefix, group in (("", results), ("shared/", shared_results)):
+    for prefix, group in (("", results), ("shared/", shared_results),
+                          ("staggered/", staggered_results)):
         for name, r in group.items():
             outputs[prefix + name] = r.pop("outputs")
     with open(args.out, "w") as f:
@@ -340,6 +468,9 @@ def main(argv=None) -> int:
           + (f", shared-prefix prefill reduction "
              f"{report['shared_prefix']['prefill_reduction']}x"
              if shared_results else "")
+          + (f", continuous-batching TTFT reduction "
+             f"{report['continuous_batching']['ttft_reduction']}x"
+             if staggered_results else "")
           + ")")
 
     # the whole point of the fused engine: strictly fewer dispatches/token
@@ -387,6 +518,20 @@ def main(argv=None) -> int:
                 >= shared_results["paged"]["peak_cache_bytes"]):
             print("[bench_serving] REGRESSION: prefix-cache peak not below "
                   "the per-slot paged peak")
+            return 1
+    if staggered_results:
+        # scheduling must never change tokens: both policies draw from the
+        # same submit-order sampling streams
+        if outputs["staggered/continuous"] != outputs["staggered/drain"]:
+            print("[bench_serving] REGRESSION: refill policy changed emitted "
+                  "tokens")
+            return 1
+        # the point of continuous batching: staggered arrivals reach their
+        # first token strictly sooner than under drain-then-refill
+        if (staggered_results["continuous"]["mean_ttft_ticks"]
+                >= staggered_results["drain"]["mean_ttft_ticks"]):
+            print("[bench_serving] REGRESSION: continuous batching did not "
+                  "beat drain-then-refill mean TTFT")
             return 1
     return 0
 

@@ -1,26 +1,53 @@
 """``distributed-serve`` — the serving "Something".
 
-A job is a batch of generation requests; the worker builds the model
-(from a checkpoint when ``run`` is set, fresh weights otherwise), runs
-the continuous-batching engine, and writes completions to the output
-prefix.  Each engine step heartbeats.
+Two shapes of serving job, sharing one engine construction path:
+
+- **static batch** (the original): the job carries ``prompts``; the
+  worker builds the model, runs the continuous-batching engine over the
+  batch, and writes completions + the full engine counter snapshot to
+  the output prefix.  Each engine step heartbeats.
+- **queue-streaming** (``request_queue`` set): the job is a *serving
+  lease*, not a batch.  The worker opens the named
+  :class:`~repro.core.queue.DurableQueue` of per-request messages and
+  streams them into the scheduler — admission happens mid-flight into
+  freed rows (continuous batching), each completed request's message is
+  acknowledged (deleted) individually, and in-flight request leases are
+  extended on the heartbeat cadence.  Fault story: a request message is
+  deleted only after its completion is recorded, so a worker crash (or
+  a ``Preempted`` heartbeat) resurfaces every unfinished request via
+  the visibility timeout — including requests the engine had preempted
+  under pool pressure and requeued locally — and another worker serves
+  them.  At-least-once, exactly like the paper's job queue, but at
+  request granularity.
+
+Engine knobs accepted from the job dict: ``max_batch``, ``max_len``,
+``prefill_chunk``, ``dispatch_mode``, ``sample_on_device``,
+``cache_mode``, ``page_size``, ``total_pages`` (omitted => adaptive),
+``prefix_cache``, scheduler knobs ``refill_policy`` and
+``prefill_token_budget``, and the cross-host prefix store
+(``prefix_store`` truthy + optional ``prefix_store_namespace``): with
+the store on, completed prompts' KV pages are content-hashed into the
+shared object store and cold workers hydrate instead of re-prefilling
+(see ``docs/serving.md``).
 """
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import jax
 
+from repro.core.queue import DurableQueue
 from repro.core.worker import WorkerContext, register_payload
 from repro.launch.train import build_model
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.prefix_store import PrefixStore
 from repro.train.checkpoint import latest_step, restore_checkpoint
 
 
-@register_payload("distributed-serve")
-def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
-    model = build_model(job)
+def _build_params(job: Dict, ctx: WorkerContext, model) -> Tuple[object, str]:
+    """Model parameters + a string pinning their identity (the prefix
+    store namespace must change whenever page bytes could)."""
     run = job.get("run")
     if run:
         step = latest_step(ctx.store, run)
@@ -28,22 +55,39 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
             raise RuntimeError(f"no checkpoint for run {run!r}")
         like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         params, _ = restore_checkpoint(ctx.store, run, step, like)
-    else:
-        params = model.init(jax.random.PRNGKey(job.get("init_seed", 0)))
+        return params, f"run={run}@{step}"
+    seed = int(job.get("init_seed", 0))
+    return model.init(jax.random.PRNGKey(seed)), f"seed={seed}"
 
-    prompts = job["prompts"]  # list of token-id lists
-    max_new = int(job.get("max_new_tokens", 8))
+
+def _build_engine(job: Dict, ctx: WorkerContext) -> ServeEngine:
+    model = build_model(job)
+    params, param_id = _build_params(job, ctx, model)
     cache_mode = str(job.get("cache_mode", "dense"))
+    if job.get("prefix_store") and cache_mode != "paged":
+        raise ValueError(
+            "job sets prefix_store but cache_mode is not 'paged'; the "
+            "cross-host prefix store would be silently inert"
+        )
     paged_kwargs = {}
     if cache_mode == "paged":
-        paged_kwargs["page_size"] = int(job.get("page_size", 16))
+        page_size = int(job.get("page_size", 16))
+        paged_kwargs["page_size"] = page_size
         # omitted total_pages => the engine sizes the pool adaptively from
         # the queue depth at submit (and logs the chosen size)
         if job.get("total_pages"):
             paged_kwargs["total_pages"] = int(job["total_pages"])
         paged_kwargs["prefix_cache"] = bool(job.get("prefix_cache", True))
-    stop = job.get("stop_token")
-    engine = ServeEngine(
+        if job.get("prefix_store"):
+            namespace = str(
+                job.get("prefix_store_namespace")
+                or f"{job.get('arch', 'arch')}/{job.get('arch_overrides', '')}"
+                f"/{param_id}/ps{page_size}"
+            )
+            paged_kwargs["prefix_store"] = PrefixStore(ctx.store, namespace)
+    budget = job.get("prefill_token_budget")  # 0 reaches the scheduler's
+    #                                           validation and is refused
+    return ServeEngine(
         model,
         params,
         max_batch=int(job.get("max_batch", 4)),
@@ -52,43 +96,190 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
         dispatch_mode=str(job.get("dispatch_mode", "fused")),
         sample_on_device=bool(job.get("sample_on_device", True)),
         cache_mode=cache_mode,
+        refill_policy=str(job.get("refill_policy", "continuous")),
+        prefill_token_budget=int(budget) if budget is not None else None,
         heartbeat=lambda: ctx.heartbeat(),
         **paged_kwargs,
     )
+
+
+def _request_from(body: Dict, job: Dict, fallback_uid: str) -> Request:
+    stop = body.get("stop_token", job.get("stop_token"))
+    return Request(
+        uid=str(body.get("uid", fallback_uid)),
+        prompt=[int(t) for t in body["prompt"]],
+        max_new_tokens=int(body.get("max_new_tokens", job.get("max_new_tokens", 8))),
+        temperature=float(body.get("temperature", job.get("temperature", 0.0))),
+        stop_token=int(stop) if stop is not None else None,
+    )
+
+
+def _snapshot(engine: ServeEngine) -> Dict:
+    """Full scheduler/cache counter snapshot, plus the legacy key aliases
+    earlier RESULTS.json consumers grew up with."""
+    snap = engine.snapshot()
+    snap["engine_steps"] = snap["steps_executed"]
+    if engine.cache_mode == "paged":
+        snap["pages_in_use_peak"] = snap["peak_pages"]
+    return snap
+
+
+@register_payload("distributed-serve")
+def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
+    engine = _build_engine(job, ctx)
+    if job.get("request_queue"):
+        return _serve_stream(job, ctx, engine)
+
+    prompts = job["prompts"]  # list of token-id lists
     engine.submit(
-        [
-            Request(uid=f"req{i}", prompt=[int(t) for t in p], max_new_tokens=max_new,
-                    temperature=float(job.get("temperature", 0.0)),
-                    stop_token=int(stop) if stop is not None else None)
-            for i, p in enumerate(prompts)
-        ]
+        [_request_from({"prompt": p}, job, f"req{i}") for i, p in enumerate(prompts)]
     )
     finished = engine.run_to_completion()
     results = {
         r.uid: {"prompt": r.prompt, "completion": r.output} for r in finished
     }
     out = job.get("output_prefix", "serve/batch0")
-    dispatch_stats = {
-        "engine_steps": engine.steps_executed,
-        "decode_dispatches": engine.decode_dispatches,
-        "prefill_dispatches": engine.prefill_dispatches,
-        "dispatches": engine.dispatches,
-        "tokens_emitted": engine.tokens_emitted,
-        "prompt_tokens_ingested": engine.prompt_tokens_ingested,
+    snap = _snapshot(engine)
+    ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **snap})
+    return {"n_requests": len(finished), **snap}
+
+
+def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
+    """Stream request messages from a DurableQueue through the scheduler.
+
+    Loop shape: top up a bounded admission backlog from the queue, run
+    one engine tick, ack whatever finished, extend in-flight leases on
+    the heartbeat cadence.  Exits when ``expected_requests`` acks have
+    landed, or after ``stream_idle_polls`` consecutive iterations with
+    no messages and no active work.
+    """
+    out = job.get("output_prefix", "serve/stream0")
+    rq = DurableQueue(
+        str(job["request_queue"]),
+        default_visibility=float(job.get("request_visibility", 120.0)),
+        clock=ctx.clock,
+    )
+    expected: Optional[int] = (
+        int(job["expected_requests"]) if job.get("expected_requests") else None
+    )
+    # generous idle default (~2.5 s of queue quiet at the default poll):
+    # the lease ending strands later arrivals with no consumer, so err
+    # well past ordinary arrival gaps; tune down for batch-like use
+    idle_limit = int(job.get("stream_idle_polls", 50))
+    poll = float(job.get("stream_poll_seconds", 0.05))
+    vis = rq.default_visibility
+    inflight: Dict[str, object] = {}  # uid -> queue Message (unacked)
+    # lease memory is O(inflight), not O(total served): completions live
+    # in the object store (one record per request, written before the
+    # ack), and only the served uid SET is held in RAM.  A redelivered
+    # served uid reads its record back to distinguish duplicate from
+    # collision — rare path, one store read.
+    # Lease retry/resume falls out of the same shape: records persisted
+    # by a previous (crashed) holder seed the set, so
+    # ``expected_requests`` (total served) still terminates and the
+    # final summary includes them.
+    req_prefix = f"{out}/requests/"
+    served = {
+        info.key[len(req_prefix):-len(".json")]
+        for info in ctx.store.list(req_prefix)
+        if info.key.endswith(".json")
     }
-    if cache_mode == "paged":
-        dispatch_stats.update(
-            pages_in_use_peak=engine.peak_pages,
-            peak_cache_bytes=engine.peak_cache_bytes,
-            dense_cache_bytes=engine.dense_cache_bytes,
-            total_pages=engine.n_pages,
-            prefix_hit_tokens=engine.prefix_hit_tokens,
-            prompt_tokens_skipped=engine.prompt_tokens_skipped,
-            pages_shared_peak=engine.pages_shared_peak,
-            cow_copies=engine.cow_copies,
-            prefix_evictions=engine.prefix_evictions,
-            preemptions=engine.preemptions,
-            tokens_discarded=engine.tokens_discarded,
-        )
-    ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **dispatch_stats})
-    return {"n_requests": len(finished), **dispatch_stats}
+    acked = 0  # THIS worker's acks (returned as n_requests)
+    idle = 0
+    last_ext = ctx.clock.now()
+    try:
+        while True:
+            # keep a pending backlog one batch deep so freed rows refill
+            # from local memory instead of waiting on a queue round-trip
+            backlog = len(engine.pending) + sum(
+                1 for s in engine.slots if s.req is not None
+            )
+            want = 2 * engine.max_batch - backlog
+            claimed = rq.receive_batch(want) if want > 0 else []
+            for m in claimed:
+                req = _request_from(m.body, job, fallback_uid=m.id)
+                # resolve client uid collisions FIRST: a DIFFERENT prompt
+                # under a known uid is its own request, disambiguated by
+                # message id — which is stable across redeliveries, so
+                # the dedup below applies to the renamed uid too
+                known_prompt = None
+                if req.uid in inflight:
+                    known_prompt = [
+                        int(t) for t in inflight[req.uid].body["prompt"]
+                    ]
+                elif req.uid in served:
+                    known_prompt = ctx.store.get_json(
+                        f"{req_prefix}{req.uid}.json"
+                    )["prompt"]
+                if known_prompt is not None and known_prompt != req.prompt:
+                    ctx.log(f"uid collision on {req.uid!r}: distinct prompt, "
+                            f"serving as {req.uid}~{m.id[:8]}")
+                    req.uid = f"{req.uid}~{m.id[:8]}"
+                if req.uid in served:
+                    # redelivery of a request already served here (its
+                    # earlier delete hit a stale receipt): ack this copy
+                    rq.delete(m)
+                    continue
+                if req.uid in inflight:
+                    # duplicate delivery while the first copy is still
+                    # being served: the receipt has rotated, so keep the
+                    # FRESH handle or the eventual ack becomes a no-op
+                    # and the served request marches to the DLQ
+                    inflight[req.uid] = m
+                    continue
+                inflight[req.uid] = m
+                engine.submit([req])
+            progressed = bool(claimed)
+            if engine.pending or engine.scheduler.has_active():
+                engine.step()  # heartbeats once per dispatch
+                progressed = True
+            # drain (not slice) the finished list: a long-lived lease
+            # must not retain every served Request object forever
+            for r in engine.scheduler.drain_finished():
+                rec = {"prompt": r.prompt, "completion": r.output}
+                m = inflight.pop(r.uid, None)
+                if m is not None:
+                    # durable-before-ack: the completion must be in the
+                    # object store BEFORE its message is deleted, or a
+                    # worker crash between ack and the lease-end summary
+                    # silently loses served requests (the visibility
+                    # timeout cannot resurface a deleted message)
+                    ctx.store.put_json(f"{req_prefix}{r.uid}.json", rec)
+                    rq.delete(m)  # per-request ack: at-least-once upheld
+                    acked += 1
+                served.add(r.uid)
+            # a preempted-and-requeued request is still in ``inflight``:
+            # its lease (and every other in-flight lease) is extended here,
+            # so durable requeue happens only if THIS worker dies
+            now = ctx.clock.now()
+            if inflight and now - last_ext > vis / 2:
+                for m in inflight.values():
+                    rq.change_visibility(m, vis)
+                last_ext = now
+            # bound per-lease memory: keep only a recent latency window
+            # (the reported percentiles describe it) — Request objects
+            # are already drained above
+            engine.scheduler.trim_samples(10_000)
+            ctx.heartbeat()
+            if expected is not None and len(served) >= expected:
+                break
+            if progressed:
+                idle = 0
+            else:
+                idle += 1
+                if idle >= idle_limit:
+                    break
+                ctx.clock.sleep(poll)
+    finally:
+        rq.close()
+    # lease-end aggregate, assembled FROM the per-request records (the
+    # single source of truth); only this one-shot summary materializes
+    # every completion in memory at once
+    results = {
+        info.key[len(req_prefix):-len(".json")]: ctx.store.get_json(info.key)
+        for info in ctx.store.list(req_prefix)
+        if info.key.endswith(".json")
+    }
+    snap = _snapshot(engine)
+    ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **snap})
+    return {"n_requests": acked, **snap}

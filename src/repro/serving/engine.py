@@ -1,10 +1,20 @@
-"""Serving engine: continuous batching, fused chunked prefill, and
-single-dispatch vectorized decode.
+"""Serving executor: the device-dispatch layer of the three-layer
+serving tier.
 
-Slot-based continuous batching (vLLM-style at miniature scale): a fixed
-pool of ``max_batch`` slots, each holding one request's cache position;
-finished slots are refilled from the pending queue every step, so the
-batch stays full under ragged request lengths.
+The serving engine is split along explicit seams (``docs/serving.md``
+has the architecture diagram):
+
+- :class:`repro.serving.scheduler.RequestScheduler` — admission queue,
+  continuous batching (freed rows refilled every tick, ``drain``
+  baseline policy, per-tick prefill token budget), preemption/requeue
+  policy, queue-wait/TTFT accounting;
+- :class:`repro.serving.cache_manager.KVCacheManager` — dense or paged
+  device cache, refcounted free-list allocator, copy-on-write, adaptive
+  pool sizing, radix prefix cache, optional cross-host prefix store;
+- :class:`ServeEngine` (this module) — owns ONLY the jitted dispatches
+  and sampling: it asks the scheduler what to run, asks the cache
+  manager to back the positions it will write, dispatches, and feeds
+  accepted tokens back to the scheduler.
 
 Hot-path structure (this is the whole point — throughput limited by the
 hardware, not by dispatch count):
@@ -23,92 +33,45 @@ hardware, not by dispatch count):
 - **sampling**: greedy/temperature sampling runs on-device inside the
   same dispatch (``repro.serving.sampling``); only ``B`` token ids cross
   the host boundary per tick instead of ``(B, vocab)`` logits.
-  ``sample_on_device=False`` restores the host path (now numerically
+  ``sample_on_device=False`` restores the host path (numerically
   stable: max-subtracted softmax).
+- **stop tokens**: the fused dispatches return a done mask computed on
+  device (``repro.serving.sampling.done_mask``); the host finalizes rows
+  straight off the mask, and finished rows are parked (pages freed)
+  before the next tick's dispatch.
 
-- **cache**: ``cache_mode="paged"`` replaces the dense per-slot
-  ``max_len`` reservation with a shared pool of fixed-size KV pages and
-  a per-slot page table.  The engine owns the allocator: pages are
-  claimed *as positions are written* (allocate-on-write, ahead of each
-  dispatch) and returned to the free list the moment a request finishes,
-  so cache memory tracks tokens actually resident instead of the
-  worst-case ``max_batch * max_len`` reservation.  Freed slots' table
-  entries hold an out-of-bounds sentinel, so a parked row's (stale)
-  write is dropped on device rather than corrupting a page that has been
-  re-issued to another slot.  ``peak_pages`` / ``peak_cache_bytes``
-  record the high-water mark the benchmark compares against the dense
-  reservation.
-- **stop tokens**: requests may carry a ``stop_token``; the fused
-  dispatches return a done mask computed on device
-  (``repro.serving.sampling.done_mask``), so the host finalizes rows
-  straight off the mask instead of re-deriving the stop condition, and
-  finished rows are parked (pages freed) before the next tick's
-  dispatch.
-- **shared prefixes**: with ``prefix_cache=True`` (paged mode default)
-  a host-side radix cache (``repro.serving.prefix_cache``) indexes
-  completed prompts' full KV pages by their token chunks.  Admission
-  matches each new prompt against the cache and *stitches* the hit into
-  the slot's page table — the matched pages are referenced (refcount
-  bumped), not recomputed, and prefill resumes from the first divergent
-  chunk.  The allocator is refcount-aware: a page is freed only when its
-  last reference (slots + cache) drops, a slot about to write a page
-  someone else still references gets a private copy first
-  (copy-on-write), and when the pool runs dry the engine evicts LRU
-  unreferenced cached prefixes, then preempts the youngest active slot
-  (its request is requeued and, thanks to the deterministic sampling
-  streams, regenerates byte-identical output) before giving up.
+Cache behaviour (paged pool, copy-on-write, shared prefixes, adaptive
+sizing) is documented on :class:`KVCacheManager`; scheduling behaviour
+(continuous batching, budgets, preemption) on :class:`RequestScheduler`.
 
 Dispatch accounting: ``decode_dispatches`` / ``prefill_dispatches`` /
 ``dispatches`` (their sum) and ``tokens_emitted`` /
 ``prompt_tokens_ingested`` feed ``benchmarks/bench_serving.py``'s
 dispatches-per-token metric.  ``steps_executed`` keeps its seed meaning
-(number of jitted decode calls).
+(number of jitted decode calls).  All counters live in one shared
+:class:`repro.serving.types.EngineStats` block (``engine.stats``); the
+flat attribute aliases below (``engine.tokens_emitted`` and friends)
+are kept as the stable public surface.
 """
 
 from __future__ import annotations
 
-import logging
-from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.models import Model
-from repro.serving.prefix_cache import PrefixCache
+from repro.serving.cache_manager import KVCacheManager
+from repro.serving.prefix_store import PrefixStore
 from repro.serving.sampling import make_decode_step, make_prefill_step
+from repro.serving.scheduler import RequestScheduler
+from repro.serving.types import EngineStats, Request, Slot
 
-_LOG = logging.getLogger(__name__)
+__all__ = ["Request", "ServeEngine", "Slot"]
 
-
-@dataclass
-class Request:
-    uid: str
-    prompt: List[int]
-    max_new_tokens: int = 16
-    temperature: float = 0.0  # 0 = greedy
-    # emitting this token id finishes the request (it is kept in the
-    # output); None disables.  Checked on device via the fused done mask.
-    stop_token: Optional[int] = None
-    # filled by the engine
-    output: List[int] = field(default_factory=list)
-    done: bool = False
-    # per-request sampling stream id (assigned at submit; scheduling- and
-    # slot-independent so fused and grouped modes draw identical samples)
-    sample_stream: int = field(default=0, compare=False, repr=False)
-
-
-@dataclass
-class _Slot:
-    req: Optional[Request] = None
-    pos: int = 0  # next cache position to write
-    remaining_prompt: List[int] = field(default_factory=list)
-    # admission order (monotonic): preemption picks the youngest = max seq
-    seq: int = -1
-    # prefix-cache stitch accounting for THIS admission (rolled back if
-    # the slot is preempted, so counters never double-count a rerun)
-    hit_tokens: int = 0
-    skipped_tokens: int = 0
+# back-compat alias: _Slot predates the layer split
+_Slot = Slot
 
 
 class ServeEngine:
@@ -128,6 +91,9 @@ class ServeEngine:
         page_size: int = 16,
         total_pages: Optional[int] = None,
         prefix_cache: bool = True,
+        prefix_store: Optional[PrefixStore] = None,
+        refill_policy: str = "continuous",
+        prefill_token_budget: Optional[int] = None,
     ):
         if dispatch_mode not in ("fused", "grouped"):
             raise ValueError(f"dispatch_mode must be fused|grouped, got {dispatch_mode!r}")
@@ -137,6 +103,14 @@ class ServeEngine:
             raise ValueError(
                 "cache_mode='paged' unsupported for arch "
                 f"{model.cfg.name!r} (no pageable KV cache)"
+            )
+        if prefix_store is not None and (cache_mode != "paged" or not prefix_cache):
+            # same refuse-inert-knob policy as prefill_token_budget below:
+            # the store publishes/hydrates through the radix cache over
+            # paged pool pages, so without both it can never move a byte
+            raise ValueError(
+                "prefix_store requires cache_mode='paged' with "
+                "prefix_cache=True; it would be silently inert here"
             )
         if dispatch_mode == "grouped" and model.cfg.family in ("ssm", "hybrid"):
             # per-group re-dispatch re-advances recurrent state every extra
@@ -156,467 +130,137 @@ class ServeEngine:
         self.dispatch_mode = dispatch_mode
         self.sample_on_device = sample_on_device
         self.cache_mode = cache_mode
-        self.page_size = int(page_size)
-        if cache_mode == "paged":
-            self.pages_per_slot = -(-max_len // self.page_size)
-            self.prefix = PrefixCache(self.page_size) if prefix_cache else None
-            self.pages_in_use = 0
-            self.peak_pages = 0
-            self.page_allocs = 0  # lifetime allocations (> n_pages => reuse)
-            # prefix-sharing / recovery accounting
-            self.prefix_hit_tokens = 0  # prompt tokens found in the cache
-            self.prompt_tokens_skipped = 0  # of those, never dispatched
-            self.pages_shared_peak = 0  # max pages with refcount > 1
-            self.cow_copies = 0
-            self.prefix_evictions = 0
-            self.preemptions = 0
-            self.tokens_discarded = 0  # preempted work (re-earned on rerun)
-            self._shared_pages = 0  # pages with refcount > 1, kept O(1)
-            self.page_bytes = 0
-            self.dense_cache_bytes = 0
-            self._adaptive = not total_pages
-            if total_pages:
-                self._init_paged_pool(int(total_pages))
-            else:
-                # sized adaptively from queue depth at first submit (and
-                # grown, up to the dense reservation, on later submits)
-                self.n_pages: Optional[int] = None
-                self.cache = None
-        else:
-            self.prefix = None
-            self.cache = model.init_cache(max_batch, max_len)
-        self.slots = [_Slot() for _ in range(max_batch)]
-        self.pending: List[Request] = []
-        self.finished: List[Request] = []
+
+        # the three layers share one counter block and are cross-wired at
+        # exactly two points: admission (scheduler -> cache: reset +
+        # stitch) and pool-pressure preemption (cache -> scheduler)
+        self.stats = EngineStats()
+        self.cache_mgr = KVCacheManager(
+            model,
+            max_batch=max_batch,
+            max_len=max_len,
+            stats=self.stats,
+            cache_mode=cache_mode,
+            page_size=page_size,
+            total_pages=total_pages,
+            prefix_cache=prefix_cache,
+            prefix_store=prefix_store,
+        )
+        self.scheduler = RequestScheduler(
+            max_batch,
+            self.stats,
+            refill_policy=refill_policy,
+            prefill_token_budget=prefill_token_budget,
+        )
+        self.scheduler.cache = self.cache_mgr
+        self.cache_mgr.preempt_for = self.scheduler.preempt_for
+
         self.rng = np.random.default_rng(rng_seed)
         self._rng_seed = rng_seed
-        self._n_submitted = 0
-        self._admit_seq = 0
         self._decode = jax.jit(make_decode_step(model, rng_seed, sample_on_device))
         self._use_prefill = (
             dispatch_mode == "fused"
             and self.prefill_chunk > 0
             and model.supports_fused_prefill
-            and not self._cache_is_rolling()
+            and not self.cache_mgr.cache_is_rolling()
         )
         self._prefill = (
             jax.jit(make_prefill_step(model, rng_seed, sample_on_device))
             if self._use_prefill
             else None
         )
-        # dispatch accounting
-        self.steps_executed = 0  # jitted decode calls (seed-compatible name)
-        self.decode_dispatches = 0
-        self.prefill_dispatches = 0
-        self.dispatches = 0
-        self.tokens_emitted = 0
-        self.prompt_tokens_ingested = 0
-
-    def _cache_is_rolling(self) -> bool:
-        """Sliding-window KV caches wrap writes mod t; right-padded prefill
-        chunks could then alias still-visible slots — decode-path ingest.
-        (Paged caches are never rolling; an adaptively-sized pool may not
-        exist yet, which is fine for this check.)"""
-        k = self.cache.get("k") if isinstance(self.cache, dict) else None
-        return k is not None and k.shape[2] < self.max_len
-
-    def _init_paged_pool(self, total_pages: Optional[int]) -> None:
-        """Create the device page pool and the host-side allocator state.
-
-        ``total_pages=None`` sizes the pool adaptively from the queue at
-        first submit: enough pages for the ``min(max_batch, queue depth)``
-        largest queued requests (prompt + new-token budget, in whole
-        pages) plus one request's worth of headroom for retained cached
-        prefixes, clamped between one request and the dense reservation.
-        """
-        dense_pages = self.max_batch * self.pages_per_slot
-        if total_pages is None:
-            total_pages = self._adaptive_pages()
-            _LOG.info(
-                "paged pool sized adaptively: %d pages of %d tokens "
-                "(queue depth %d, max_batch %d, dense reservation %d pages)",
-                total_pages, self.page_size, len(self.pending), self.max_batch,
-                dense_pages,
-            )
-        self.n_pages = int(total_pages)
-        self.cache = self.model.init_cache(
-            self.max_batch, self.max_len,
-            paged=True, page_size=self.page_size, n_pages=self.n_pages,
-        )
-        # host-side allocator: free list + per-page refcounts + per-slot
-        # page lists + the numpy shadow of the device page table (OOB
-        # sentinel = unbacked)
-        self._free_pages = list(range(self.n_pages))
-        self._page_refs = [0] * self.n_pages
-        self._slot_pages: List[List[int]] = [[] for _ in range(self.max_batch)]
-        self._table = np.full(
-            (self.max_batch, self.pages_per_slot), self.n_pages, np.int32
-        )
-        self._table_dirty = True
-        # bytes of ONE page across every layer and pool leaf (k+v, or
-        # the MLA latent pool) — peak_cache_bytes = peak_pages * this
-        self.page_bytes = sum(
-            leaf.size * leaf.dtype.itemsize // self.n_pages
-            for name, leaf in self.cache.items()
-            if name.endswith("_pages")
-        )
-        self.dense_cache_bytes = dense_pages * self.page_bytes
-
-    def _adaptive_pages(self) -> int:
-        """Pool size for the current queue: pages for the
-        ``min(max_batch, queue depth)`` largest queued requests (prompt +
-        new-token budget, whole pages) + one request of headroom for
-        retained prefixes + pages already resident, clamped between one
-        request and the dense reservation."""
-        ps = self.page_size
-        dense_pages = self.max_batch * self.pages_per_slot
-        demands = [
-            min(self.pages_per_slot, -(-(len(r.prompt) + r.max_new_tokens) // ps))
-            for r in self.pending
-        ] or [self.pages_per_slot]
-        per_req = max(demands)
-        conc = max(1, min(self.max_batch, len(self.pending)))
-        want = sum(sorted(demands)[-conc:]) + per_req + self.pages_in_use
-        return max(per_req, min(dense_pages, want))
-
-    def _grow_pool(self, new_n: int) -> None:
-        """Extend an adaptively-sized pool in place (later submits may
-        queue larger requests than the first sizing saw).  Existing pages
-        keep their ids; the OOB sentinel moves from old to new ``n_pages``
-        in the table shadow and is re-pushed before the next dispatch.
-        Growing changes the pool leaves' shapes, so the next dispatch
-        retraces the jitted step — the submit path grows in geometric
-        steps to bound how often that compile cliff is paid."""
-        import jax.numpy as jnp
-
-        old = self.n_pages
-        for name, leaf in self.cache.items():
-            if name.endswith("_pages"):
-                pad = jnp.zeros(
-                    leaf.shape[:1] + (new_n - old,) + leaf.shape[2:], leaf.dtype
+        if prefill_token_budget is not None:
+            # a finite budget holds rows mid-prefill across decode ticks.
+            # For recurrent state that is corruption, not a schedule: the
+            # batch-wide decode dispatch advances EVERY row's recurrence,
+            # including the held row's, with its garbage token (KV writes
+            # are idempotent, recurrences are not).  And without the
+            # fused prefill path the knob would be silently inert —
+            # refuse both up front rather than mislead.
+            if model.cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    "prefill_token_budget is unsupported for recurrent "
+                    f"(family {model.cfg.family!r}) models: a mid-prefill "
+                    "row's recurrence would be advanced by the decode "
+                    "dispatch it sits out"
                 )
-                self.cache[name] = jnp.concatenate([leaf, pad], axis=1)
-        self.n_pages = new_n
-        self._free_pages.extend(range(old, new_n))
-        self._page_refs.extend([0] * (new_n - old))
-        self._table[self._table == old] = new_n
-        self._table_dirty = True
-        _LOG.info(
-            "paged pool grown adaptively: %d -> %d pages (queue depth %d)",
-            old, new_n, len(self.pending),
-        )
+            if not self._use_prefill:
+                raise ValueError(
+                    "prefill_token_budget requires the fused prefill path "
+                    "(dispatch_mode='fused', prefill_chunk > 0, fused-"
+                    "prefill-capable arch); it would be silently inert here"
+                )
 
-    # ------------------------------------------------------- page allocator
+    # ---------------------------------------------- layer-delegation surface
+    # The flat attribute API predates the layer split and is the stable
+    # public surface (tests, benchmarks, payloads); everything below is
+    # a view onto the layers, writable where the benchmark re-baselines.
+    @property
+    def cache(self):
+        return self.cache_mgr.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.cache_mgr.cache = value
+
+    @property
+    def prefix(self):
+        return self.cache_mgr.prefix
+
+    @property
+    def pending(self) -> List[Request]:
+        return self.scheduler.pending
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.scheduler.finished
+
+    @property
+    def slots(self) -> List[Slot]:
+        return self.scheduler.slots
+
     @property
     def peak_cache_bytes(self) -> int:
-        """High-water cache footprint: pages actually resident (paged) or
-        the full dense reservation."""
-        if self.cache_mode != "paged":
-            return sum(
-                leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(self.cache)
-            )
-        return self.peak_pages * self.page_bytes
+        return self.cache_mgr.peak_cache_bytes
 
-    def _incref(self, pid: int) -> None:
-        """Add a reference (stitch / cache adoption), tracking the shared
-        high-water mark at the 1 -> 2 transition."""
-        self._page_refs[pid] += 1
-        if self._page_refs[pid] == 2:
-            self._shared_pages += 1
-            if self._shared_pages > self.pages_shared_peak:
-                self.pages_shared_peak = self._shared_pages
-
-    def _decref(self, pid: int) -> None:
-        """Drop one reference; the page returns to the free list only when
-        its last holder (slot or prefix cache) lets go."""
-        self._page_refs[pid] -= 1
-        if self._page_refs[pid] < 0:  # allocator invariant
-            raise AssertionError(f"page {pid} refcount went negative")
-        if self._page_refs[pid] == 1:
-            self._shared_pages -= 1
-        elif self._page_refs[pid] == 0:
-            self._free_pages.append(pid)  # LIFO: reuse hot pages
-            self.pages_in_use -= 1
-
-    def _alloc_page(self, row: int) -> Optional[int]:
-        """Claim a free page for ``row`` (refcount 1).
-
-        On exhaustion, recover in escalating order: evict LRU cached
-        prefixes nobody maps, then preempt the youngest active slot
-        (requeueing its request — deterministic sampling streams make the
-        rerun byte-identical).  If the youngest is ``row`` itself it is
-        parked in favor of older slots and ``None`` is returned; the
-        caller must drop the row from this tick.  Raises only when a
-        lone request cannot fit in the entire pool.
-        """
-        while not self._free_pages:
-            if self.prefix is not None:
-                evicted = self.prefix.evict(1, lambda p: self._page_refs[p])
-                if evicted:
-                    for pid in evicted:
-                        self._decref(pid)  # cache ownership -> free list
-                    self.prefix_evictions += len(evicted)
-                    continue
-            victim = None
-            for i, s in enumerate(self.slots):
-                if s.req is not None and (victim is None or s.seq > self.slots[victim].seq):
-                    victim = i
-            others_active = any(
-                s.req is not None for j, s in enumerate(self.slots) if j != row
-            )
-            if victim is None or (victim == row and not others_active):
-                raise RuntimeError(
-                    f"paged KV pool exhausted ({self.n_pages} pages of "
-                    f"{self.page_size} tokens) with nothing evictable or "
-                    "preemptable; raise total_pages or lower request length"
-                )
-            self._preempt(victim)
-            if victim == row:
-                return None
-        pid = self._free_pages.pop()
-        self._page_refs[pid] = 1
-        self.pages_in_use += 1
-        self.page_allocs += 1
-        return pid
-
-    def _copy_page(self, src: int, dst: int) -> None:
-        """Copy-on-write: duplicate one physical page across every layer
-        and pool leaf (one device op per leaf, outside the jitted step)."""
-        for name, leaf in self.cache.items():
-            if name.endswith("_pages"):
-                self.cache[name] = leaf.at[:, dst].set(leaf[:, src])
-
-    def _ensure_pages(
-        self, row: int, n_tokens: int, write_start: Optional[int] = None
-    ) -> bool:
-        """Back row ``row``'s first ``n_tokens`` positions with physical
-        pages (allocate-on-write, called ahead of every dispatch that will
-        write those positions).
-
-        ``write_start`` marks the first position the coming dispatch will
-        write: any page in the write range that another holder (a sharing
-        slot or the prefix cache) still references is copied to a private
-        page first, so shared pages are immutable once published.  Returns
-        False if ``row`` itself was preempted while recovering pool space
-        (the caller must drop the row from this tick's dispatch).
-        """
-        need = -(-n_tokens // self.page_size)
-        if need > self.pages_per_slot:
-            raise ValueError(
-                f"request needs {n_tokens} cache positions but max_len="
-                f"{self.max_len} caps a slot at {self.pages_per_slot} pages "
-                f"of {self.page_size} tokens"
-            )
-        pages = self._slot_pages[row]
-        shortfall = (need - len(pages)) - len(self._free_pages)
-        if write_start is not None:
-            # the CoW pass below will also allocate one page per shared
-            # page in the write range — count those into the bulk reclaim
-            shortfall += sum(
-                1
-                for j in range(min(write_start // self.page_size, len(pages)),
-                               min(need, len(pages)))
-                if self._page_refs[pages[j]] > 1
-            )
-        if shortfall > 0 and self.prefix is not None:
-            # bulk pre-eviction: reclaim the whole shortfall in one radix
-            # pass instead of one tree walk per page inside _alloc_page
-            evicted = self.prefix.evict(shortfall, lambda p: self._page_refs[p])
-            for pid in evicted:
-                self._decref(pid)
-            self.prefix_evictions += len(evicted)
-        while len(pages) < need:
-            pid = self._alloc_page(row)
-            if pid is None:
-                return False
-            self._table[row, len(pages)] = pid
-            pages.append(pid)
-            self._table_dirty = True
-        if write_start is not None:
-            for j in range(write_start // self.page_size, need):
-                old = pages[j]
-                if self._page_refs[old] > 1:  # shared: copy before write
-                    new = self._alloc_page(row)
-                    if new is None:
-                        return False
-                    self._copy_page(old, new)
-                    self._decref(old)  # still >= 1: another slot / the cache
-                    pages[j] = new
-                    self._table[row, j] = new
-                    self._table_dirty = True
-                    self.cow_copies += 1
-        self.peak_pages = max(self.peak_pages, self.pages_in_use)
-        return True
-
-    def _release_slot_pages(self, row: int) -> None:
-        """Drop the slot's references (free-on-finish for private pages;
-        shared/cached pages stay resident) and reset its table row to the
-        OOB sentinel so stale writes become no-ops."""
-        pages = self._slot_pages[row]
-        if not pages:
-            return
-        for pid in reversed(pages):
-            self._decref(pid)
-        self._slot_pages[row] = []
-        self._table[row, :] = self.n_pages
-        self._table_dirty = True
-
-    def _preempt(self, row: int) -> None:
-        """Pool-pressure recovery: release the slot and requeue its request
-        at the queue front.  Any generated tokens are discarded — the
-        per-request sampling stream replays them identically on rerun.
-
-        Delivery counters are rolled back to what the rerun will re-earn
-        (the discarded work lands in ``tokens_discarded`` instead), so
-        ``tokens_emitted`` always equals tokens actually delivered and the
-        paged-vs-dense parity gates stay exact across preemptions."""
-        slot = self.slots[row]
-        req = slot.req
-        self._release_slot_pages(row)
-        emitted = len(req.output)
-        ingested = min(slot.pos, len(req.prompt)) - slot.skipped_tokens
-        self.tokens_emitted -= emitted
-        self.prompt_tokens_ingested -= ingested
-        self.tokens_discarded += emitted + ingested
-        self.prefix_hit_tokens -= slot.hit_tokens
-        self.prompt_tokens_skipped -= slot.skipped_tokens
-        req.output = []
-        req.done = False
-        slot.req = None
-        slot.pos = 0
-        slot.remaining_prompt = []
-        slot.hit_tokens = 0
-        slot.skipped_tokens = 0
-        self.pending.insert(0, req)
-        self.preemptions += 1
-
-    # --------------------------------------------------------- prefix cache
-    def _stitch_prefix(self, row: int) -> None:
-        """Admission-time prefix reuse: map the longest cached prefix of
-        the new request's prompt straight into its page table and skip
-        prefill for those tokens.  At least one prompt token is always
-        held back and re-dispatched — its logits seed generation — so a
-        full-prompt hit re-writes one position inside the last shared
-        page, which copy-on-write then privatizes."""
-        slot = self.slots[row]
-        prompt = slot.req.prompt
-        path = self.prefix.match(prompt)[: self.pages_per_slot]
-        matched = len(path) * self.page_size
-        eff = min(matched, len(prompt) - 1)
-        if eff <= 0:
-            return
-        pages = self._slot_pages[row]
-        for j, node in enumerate(path):
-            self._incref(node.page)
-            self._table[row, j] = node.page
-            pages.append(node.page)
-        self._table_dirty = True
-        slot.pos = eff
-        slot.remaining_prompt = list(prompt[eff:])
-        slot.hit_tokens = matched
-        slot.skipped_tokens = eff
-        self.prefix_hit_tokens += matched
-        self.prompt_tokens_skipped += eff
-
-    def _prefix_insert(self, row: int) -> None:
-        """Publish a freshly-ingested prompt's full pages to the radix
-        cache (called the moment the prompt is fully resident, before the
-        row can finish and release them).  Chunks already cached keep the
-        cache's page; only newly adopted pages gain the cache's ref."""
-        if self.prefix is None:
-            return
-        slot = self.slots[row]
-        prompt = slot.req.prompt
-        n_full = min(len(prompt) // self.page_size, len(self._slot_pages[row]))
-        if n_full == 0:
-            return
-        adopted = self.prefix.insert(prompt, self._slot_pages[row][:n_full])
-        for pid in adopted:
-            self._incref(pid)
-
-    def _push_table(self) -> None:
-        """Sync the host page table to the device cache before a dispatch."""
-        if self.cache_mode == "paged" and self._table_dirty:
-            import jax.numpy as jnp
-
-            self.cache["page_table"] = jnp.asarray(self._table)
-            self._table_dirty = False
+    def snapshot(self) -> Dict:
+        """Full counter + timing snapshot (what the ``distributed-serve``
+        payload publishes next to the completions)."""
+        snap = self.stats.snapshot()
+        snap["peak_cache_bytes"] = self.peak_cache_bytes
+        snap["timing"] = self.scheduler.timing()
+        if self.cache_mode == "paged":
+            snap["total_pages"] = self.cache_mgr.n_pages
+            snap["page_size"] = self.cache_mgr.page_size
+        return snap
 
     # ------------------------------------------------------------- intake
     def submit(self, reqs: List[Request]) -> None:
-        for r in reqs:
-            r.sample_stream = self._n_submitted
-            self._n_submitted += 1
-        self.pending.extend(reqs)
-        if self.cache_mode == "paged" and self._adaptive and self.pending:
-            # adaptive pool sizing deferred to first (non-empty) submit so
-            # the queue depth is known (satellite: the caller no longer
-            # guesses); later submits can only GROW the pool, up to the
-            # dense reservation — never strand a bigger-than-pool request
-            if self.cache is None:
-                self._init_paged_pool(None)
-            else:
-                want = self._adaptive_pages()
-                if want > self.n_pages:
-                    # geometric step (>= 1.5x) so a stream of growing jobs
-                    # pays O(log) recompiles, not one per submit
-                    dense_pages = self.max_batch * self.pages_per_slot
-                    self._grow_pool(
-                        min(dense_pages,
-                            max(want, self.n_pages + -(-self.n_pages // 2)))
-                    )
-
-    def _refill(self) -> None:
-        for row, slot in enumerate(self.slots):
-            if slot.req is None and self.pending:
-                req = self.pending.pop(0)
-                slot.req = req
-                slot.pos = 0
-                slot.seq = self._admit_seq
-                self._admit_seq += 1
-                slot.remaining_prompt = list(req.prompt)
-                slot.hit_tokens = 0
-                slot.skipped_tokens = 0
-                # row identity comes from ENUMERATION — _Slot is a value-
-                # comparing dataclass, so slots.index(slot) can return a
-                # different-but-equal slot and zero the wrong row
-                self._reset_row(row)
-                if self.prefix is not None:
-                    self._stitch_prefix(row)
-
-    def _reset_row(self, row: int) -> None:
-        if self.cache_mode == "paged":
-            # nothing to zero: the row's pages went back to the free list
-            # at finish, its table row is the OOB sentinel, and stale data
-            # inside a re-issued page sits past the new owner's write
-            # frontier where the causal mask excludes it
-            return
-        import jax.numpy as jnp
-
-        def zero_row(x):
-            if x.ndim >= 2 and x.shape[1] == self.max_batch:
-                return x.at[:, row].set(jnp.zeros_like(x[:, row]))
-            return x
-
-        self.cache = jax.tree.map(zero_row, self.cache)
+        self.scheduler.submit(reqs)
+        # adaptive pool sizing sees the queue depth at submit (the caller
+        # no longer guesses total_pages)
+        self.cache_mgr.on_submit(self.scheduler.pending)
 
     # ------------------------------------------------------------- stepping
     def step(self) -> int:
         """One engine tick.
 
-        Fused mode: pending prompt chunks are ingested first (>= chunk-size
-        tokens per prefill dispatch), then every generating slot advances
-        one token in a SINGLE decode dispatch regardless of position mix.
-        Grouped mode reproduces the seed's per-position-group dispatching
-        (with its cross-row KV corruption fixed) for comparison.  NOTE:
-        grouped dispatching is inherently wrong for recurrent (SSM /
-        hybrid) state — every extra per-tick dispatch re-advances all
-        rows' recurrences (KV writes are idempotent, recurrences are
-        not).  That unfixable property is part of why the fused path
-        exists; use grouped mode only on attention-family models.
+        The scheduler admits queued requests into freed rows (continuous
+        batching), then: fused mode ingests pending prompt chunks
+        (>= chunk-size tokens per prefill dispatch, bounded by the
+        scheduler's per-tick prefill token budget) and advances every
+        decode-ready slot one token in a SINGLE decode dispatch
+        regardless of position mix.  Grouped mode reproduces the seed's
+        per-position-group dispatching (with its cross-row KV corruption
+        fixed) for comparison.  NOTE: grouped dispatching is inherently
+        wrong for recurrent (SSM / hybrid) state — every extra per-tick
+        dispatch re-advances all rows' recurrences (KV writes are
+        idempotent, recurrences are not).  That unfixable property is
+        part of why the fused path exists; use grouped mode only on
+        attention-family models.
         """
-        self._refill()
-        if not any(s.req is not None for s in self.slots):
+        self.scheduler.begin_tick()
+        if not self.scheduler.has_active():
             return 0
         emitted = 0
         if self._use_prefill:
@@ -631,19 +275,56 @@ class ServeEngine:
     def _ingest_prompts(self) -> int:
         emitted = 0
         B, C = self.max_batch, self.prefill_chunk
+        slots = self.scheduler.slots
+        budget = self.scheduler.prefill_token_budget
+        left = budget  # None = unbounded: drain every prompt this tick
         while True:
+            # plan this dispatch under the remaining tick budget: per-row
+            # token counts fixed BEFORE the reservation pass below
+            plan: Dict[int, int] = {}
+            prefilling = [
+                i for i, s in enumerate(slots)
+                if s.req is not None and s.remaining_prompt
+            ]
+            if not prefilling or (left is not None and left <= 0):
+                return emitted
+            if left is None:
+                for i in prefilling:
+                    plan[i] = min(C, len(slots[i].remaining_prompt))
+            else:
+                # fair-share the remaining budget across prefilling rows
+                # (ceil of an even split each), rotating the head row by
+                # tick so a budget smaller than the row count cannot
+                # pin-starve the same rows forever — lowest-index-first
+                # would hold a short prompt hostage behind a long one
+                start = self.scheduler.tick % len(prefilling)
+                order = prefilling[start:] + prefilling[:start]
+                for idx, i in enumerate(order):
+                    share = -(-left // (len(order) - idx))
+                    n = min(C, len(slots[i].remaining_prompt), share)
+                    if n > 0:
+                        plan[i] = n
+                        left -= n
+            if not plan:
+                return emitted
             if self.cache_mode == "paged":
                 # reservation pass BEFORE building dispatch inputs: CoW /
                 # eviction / preemption all mutate slot state, and a later
                 # row's allocation may park an earlier one — the rows list
                 # below is computed only after every survivor holds pages
-                for i, s in enumerate(self.slots):
+                for i, n in plan.items():
+                    s = slots[i]
                     if s.req is not None and s.remaining_prompt:
-                        n = min(C, len(s.remaining_prompt))
-                        self._ensure_pages(i, s.pos + n, write_start=s.pos)
+                        self.cache_mgr.ensure_pages(i, s.pos + n, write_start=s.pos)
             rows = [
-                i for i, s in enumerate(self.slots) if s.req is not None and s.remaining_prompt
+                i for i in plan
+                if slots[i].req is not None and slots[i].remaining_prompt
             ]
+            if left is not None:
+                # refund tokens planned for rows the reservation pass
+                # dropped (preempted/parked): the tick budget promises
+                # tokens INGESTED, not tokens planned
+                left += sum(plan[i] for i in plan if i not in rows)
             if not rows:
                 return emitted
             tokens = np.zeros((B, C), np.int32)
@@ -655,8 +336,8 @@ class ServeEngine:
             stops = np.full((B,), -1, np.int32)
             max_news = np.full((B,), 1 << 30, np.int32)
             for i in rows:
-                slot = self.slots[i]
-                n = min(C, len(slot.remaining_prompt))
+                slot = slots[i]
+                n = min(plan[i], len(slot.remaining_prompt))
                 tokens[i, :n] = slot.remaining_prompt[:n]
                 offsets[i] = slot.pos
                 lengths[i] = n
@@ -665,32 +346,32 @@ class ServeEngine:
                 if slot.req.stop_token is not None:
                     stops[i] = slot.req.stop_token
                 max_news[i] = slot.req.max_new_tokens
-            self._push_table()
+            self.cache_mgr.push_table()
             if self.sample_on_device:
-                nxt, done, self.cache = self._prefill(
-                    self.params, self.cache, tokens, offsets, lengths, temps,
-                    streams, steps, stops, max_news,
+                nxt, done, self.cache_mgr.cache = self._prefill(
+                    self.params, self.cache_mgr.cache, tokens, offsets, lengths,
+                    temps, streams, steps, stops, max_news,
                 )
                 nxt, done, lg = np.asarray(nxt), np.asarray(done), None
             else:
-                logits, self.cache = self._prefill(
-                    self.params, self.cache, tokens, offsets, lengths
+                logits, self.cache_mgr.cache = self._prefill(
+                    self.params, self.cache_mgr.cache, tokens, offsets, lengths
                 )
                 nxt, done, lg = None, None, np.asarray(logits)
-            self.prefill_dispatches += 1
-            self.dispatches += 1
+            self.stats.prefill_dispatches += 1
+            self.stats.dispatches += 1
             self.heartbeat()
             for i in rows:
-                slot = self.slots[i]
-                n = min(C, len(slot.remaining_prompt))
+                slot = slots[i]
+                n = min(plan[i], len(slot.remaining_prompt))
                 del slot.remaining_prompt[:n]
                 slot.pos += n
-                self.prompt_tokens_ingested += n
+                self.stats.prompt_tokens_ingested += n
                 if not slot.remaining_prompt:
                     # prompt fully resident: publish its full pages to the
                     # prefix cache BEFORE accept (which may finish the row
                     # and drop its references)
-                    self._prefix_insert(i)
+                    self.cache_mgr.prefix_insert(i, slot.req.prompt)
                     # the chunk's last-token logits seed generation
                     tok = (
                         int(nxt[i])
@@ -707,13 +388,19 @@ class ServeEngine:
     # -- decode -------------------------------------------------------------
     def _build_decode_inputs(self):
         B = self.max_batch
+        slots = self.scheduler.slots
         if self.cache_mode == "paged":
             # reservation pass first (see _ingest_prompts): allocation may
             # CoW a shared page or preempt a slot, so inputs are built only
-            # from the rows that still hold their pages afterwards
-            for i, s in enumerate(self.slots):
+            # from the rows that still hold their pages afterwards.  Rows
+            # held mid-prefill by the tick budget are covered too: the
+            # batch-wide dispatch still writes (garbage) KV at their pos
+            # through their LIVE page table, so a shared prefix page in
+            # that position must be privatized first — the row itself
+            # overwrites the position when its prefill resumes
+            for i, s in enumerate(slots):
                 if s.req is not None:
-                    self._ensure_pages(i, s.pos + 1, write_start=s.pos)
+                    self.cache_mgr.ensure_pages(i, s.pos + 1, write_start=s.pos)
         tokens = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
@@ -722,12 +409,12 @@ class ServeEngine:
         stops = np.full((B,), -1, np.int32)
         max_news = np.full((B,), 1 << 30, np.int32)
         active = []
-        for i, slot in enumerate(self.slots):
+        for i, slot in enumerate(slots):
             # parked rows keep their stale pos: dense mode confines the
             # write to their own (dead) row, which is zeroed at refill;
             # paged mode drops it on the OOB page-table sentinel
             pos[i] = slot.pos
-            if slot.req is None:
+            if slot.req is None or self._mid_prefill(slot):
                 continue
             active.append(i)
             if slot.remaining_prompt:  # decode-path ingestion fallback
@@ -744,39 +431,49 @@ class ServeEngine:
             max_news[i] = slot.req.max_new_tokens
         return active, tokens, pos, temps, streams, steps, stops, max_news
 
+    def _mid_prefill(self, slot: Slot) -> bool:
+        """Under a finite prefill budget a fused-prefill row can reach the
+        decode tick with prompt tokens still pending; it sits the decode
+        out and resumes chunked prefill next tick.  (Without fused
+        prefill, remaining_prompt rows ARE the decode-path ingestion.)"""
+        return bool(self._use_prefill and slot.remaining_prompt)
+
     def _decode_dispatch(
         self, tokens, pos, temps, streams, steps, stops, max_news
     ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray], Optional[np.ndarray]]:
-        self._push_table()
+        self.cache_mgr.push_table()
         if self.sample_on_device:
-            nxt, done, self.cache = self._decode(
-                self.params, self.cache, tokens, pos, temps, streams, steps,
-                stops, max_news,
+            nxt, done, self.cache_mgr.cache = self._decode(
+                self.params, self.cache_mgr.cache, tokens, pos, temps, streams,
+                steps, stops, max_news,
             )
             out = (np.asarray(nxt), np.asarray(done), None)
         else:
-            logits, self.cache = self._decode(self.params, self.cache, tokens, pos)
+            logits, self.cache_mgr.cache = self._decode(
+                self.params, self.cache_mgr.cache, tokens, pos
+            )
             out = (None, None, np.asarray(logits))
-        self.decode_dispatches += 1
-        self.steps_executed += 1
-        self.dispatches += 1
+        self.stats.decode_dispatches += 1
+        self.stats.steps_executed += 1
+        self.stats.dispatches += 1
         self.heartbeat()
         return out
 
     def _advance_rows(self, rows, nxt, done, lg) -> int:
         emitted = 0
+        slots = self.scheduler.slots
         for i in rows:
-            slot = self.slots[i]
+            slot = slots[i]
             slot.pos += 1
             if slot.remaining_prompt:
                 slot.remaining_prompt.pop(0)
-                self.prompt_tokens_ingested += 1
+                self.stats.prompt_tokens_ingested += 1
                 if slot.remaining_prompt:
                     continue  # still ingesting the prompt
                 # decode-path ingestion just wrote the last prompt token:
                 # publish the prompt's full pages (MoE/MLA archs reach the
                 # prefix cache through this path)
-                self._prefix_insert(i)
+                self.cache_mgr.prefix_insert(i, slot.req.prompt)
             tok = (
                 int(nxt[i])
                 if nxt is not None
@@ -807,7 +504,7 @@ class ServeEngine:
             return 0
         groups: Dict[int, List[int]] = {}
         for i in active:
-            groups.setdefault(self.slots[i].pos, []).append(i)
+            groups.setdefault(self.scheduler.slots[i].pos, []).append(i)
         emitted = 0
         for _, rows in sorted(groups.items()):
             nxt, done, lg = self._decode_dispatch(*inputs)
@@ -816,21 +513,17 @@ class ServeEngine:
 
     # -- bookkeeping ---------------------------------------------------------
     def _accept_token(self, row: int, tok: int, done: Optional[bool] = None) -> None:
-        slot = self.slots[row]
+        slot = self.scheduler.slots[row]
         slot.req.output.append(tok)
-        self.tokens_emitted += 1
+        self.stats.tokens_emitted += 1
+        self.scheduler.on_token(row)
         if done is None:
             # host fallback (sample_on_device=False): re-derive the mask
             done = len(slot.req.output) >= slot.req.max_new_tokens or (
                 slot.req.stop_token is not None and tok == slot.req.stop_token
             )
         if done or slot.pos >= self.max_len - 1:
-            slot.req.done = True
-            self.finished.append(slot.req)
-            slot.req = None
-            slot.remaining_prompt = []
-            if self.cache_mode == "paged":
-                self._release_slot_pages(row)
+            self.scheduler.finish(row)
 
     def _host_sample(
         self,
@@ -863,7 +556,40 @@ class ServeEngine:
 
     def run_to_completion(self, max_steps: int = 100_000) -> List[Request]:
         steps = 0
-        while (self.pending or any(s.req for s in self.slots)) and steps < max_steps:
+        while (
+            self.scheduler.pending or self.scheduler.has_active()
+        ) and steps < max_steps:
             self.step()
             steps += 1
-        return self.finished
+        return self.scheduler.finished
+
+
+def _stats_alias(name: str) -> property:
+    """Read/write view of one EngineStats counter on the engine."""
+    return property(
+        lambda self: getattr(self.stats, name),
+        lambda self, value: setattr(self.stats, name, value),
+    )
+
+
+def _cache_alias(name: str) -> property:
+    return property(lambda self: getattr(self.cache_mgr, name))
+
+
+for _name in (
+    "steps_executed", "decode_dispatches", "prefill_dispatches", "dispatches",
+    "tokens_emitted", "prompt_tokens_ingested",
+    "pages_in_use", "peak_pages", "page_allocs", "page_bytes",
+    "dense_cache_bytes",
+    "prefix_hit_tokens", "prompt_tokens_skipped", "pages_shared_peak",
+    "cow_copies", "prefix_evictions", "preemptions", "tokens_discarded",
+    "prefix_store_pages_published", "prefix_store_pages_hydrated",
+    "prefix_store_tokens_hydrated",
+):
+    setattr(ServeEngine, _name, _stats_alias(_name))
+for _name in (
+    "page_size", "n_pages", "pages_per_slot",
+    "_free_pages", "_page_refs", "_slot_pages", "_table",
+):
+    setattr(ServeEngine, _name, _cache_alias(_name))
+del _name

@@ -1,0 +1,126 @@
+"""Cross-host prefix page store — warm KV prefixes through the object
+store.
+
+The radix prefix cache (``repro.serving.prefix_cache``) only helps
+requests landing on the *same* engine.  A fleet of queue-fed serving
+workers (the whole point of the distributed-something tier) sees the
+same system prompts on every host, and each host re-prefills them from
+scratch.  This module applies the paper's data-sharing-via-object-store
+move to KV state: a completed prompt's full pages are content-hashed
+and published to the shared :class:`~repro.core.storage.ObjectStore`,
+so a worker admitting a cold request can *hydrate* its radix cache from
+pages another worker computed instead of dispatching prefill.
+
+Key scheme (chained content hash):
+
+- the chain root is ``sha256(namespace)`` — ``namespace`` must pin
+  everything page bytes depend on: architecture, parameter identity
+  (run name / init seed) and ``page_size``.  Two engines with the same
+  namespace MUST hold byte-identical weights; nothing else is checked.
+- chunk ``j`` of a prompt (its ``page_size`` token-aligned tokens) is
+  keyed by ``sha256(parent_key || int64 tokens of chunk j)`` where
+  ``parent_key`` is chunk ``j-1``'s key.  A chunk's key therefore
+  commits to the *entire* prefix, exactly like a radix-tree path, so
+  hydration is a walk: fetch chunk 0's key, then its child, until a
+  miss.
+
+Page payloads are the page's slice of every pool leaf (``k_pages`` /
+``v_pages``, or the MLA ``kv_pages`` latent), ``npz``-serialized.  K/V
+of a token depends only on the token and its absolute position, and
+cached prefixes are position-0-aligned, so a hydrated page is
+byte-identical to what a local prefill would have written (same dtype,
+deterministic math).
+
+Consistency caveats (documented in ``docs/serving.md``): publication is
+atomic per page (``ObjectStore.put_bytes`` is temp-file + rename) and
+last-writer-wins — concurrent publishers write identical bytes, so the
+race is benign.  A page is published only once fully written and never
+mutated afterwards (copy-on-write privatizes shared pages before any
+write), so readers can never observe a half-warm page.  There is no
+eviction protocol: the store grows until an operator sweeps the key
+prefix, and a fetched page is trusted to match its key (shape/dtype are
+verified, token content is not re-derived).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import io
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+
+class PrefixStore:
+    """Content-addressed KV prefix pages over an object store."""
+
+    def __init__(self, store, namespace: str, key_prefix: str = "kvprefix"):
+        self.store = store
+        self.namespace = str(namespace)
+        self.key_prefix = key_prefix.rstrip("/")
+        self._root = hashlib.sha256(self.namespace.encode("utf-8")).hexdigest()
+
+    # ------------------------------------------------------------- keys
+    def root_key(self) -> str:
+        return self._root
+
+    def child_key(self, parent_key: str, chunk: Sequence[int]) -> str:
+        h = hashlib.sha256()
+        h.update(parent_key.encode("ascii"))
+        h.update(np.asarray(chunk, np.int64).tobytes())
+        return h.hexdigest()
+
+    def _object_key(self, page_key: str) -> str:
+        # shard the flat hash space one level deep, S3-style
+        return f"{self.key_prefix}/{page_key[:2]}/{page_key}"
+
+    # ------------------------------------------------------- page payloads
+    @staticmethod
+    def pack(arrays: Dict[str, np.ndarray]) -> bytes:
+        bio = io.BytesIO()
+        np.savez(bio, **arrays)
+        return bio.getvalue()
+
+    @staticmethod
+    def unpack(blob: bytes) -> Dict[str, np.ndarray]:
+        with np.load(io.BytesIO(blob)) as z:
+            return {k: z[k] for k in z.files}
+
+    # ------------------------------------------------------------ protocol
+    def exists(self, page_key: str) -> bool:
+        return self.store.exists(self._object_key(page_key))
+
+    def publish(self, page_key: str, arrays: Dict[str, np.ndarray]) -> None:
+        """Write one page's leaves unconditionally (atomic put).  Callers
+        probe :meth:`exists` first to skip redundant writes; a lost race
+        is a benign last-writer-wins overwrite of identical bytes."""
+        self.store.put_bytes(self._object_key(page_key), self.pack(arrays))
+
+    def fetch(
+        self, page_key: str, like: Dict[str, np.ndarray]
+    ) -> Optional[Dict[str, np.ndarray]]:
+        """Read one page's leaves, or None on miss/incompatibility.
+
+        ``like`` maps leaf name -> an array of the expected per-page
+        shape/dtype; a blob whose leaves do not match exactly (different
+        arch/config published under a colliding namespace) is treated as
+        a miss rather than corrupting the pool.
+        """
+        key = self._object_key(page_key)
+        try:
+            blob = self.store.get_bytes(key)
+        except (FileNotFoundError, OSError):
+            # covers both a plain miss and the exists/read race against
+            # an operator sweeping the key prefix: hydration is
+            # best-effort, so a swept page is a miss, never a crash
+            return None
+        try:
+            arrays = self.unpack(blob)
+        except (ValueError, OSError):
+            return None  # truncated/corrupt blob: miss, not a crash
+        if set(arrays) != set(like):
+            return None
+        for name, ref in like.items():
+            if arrays[name].shape != ref.shape or arrays[name].dtype != ref.dtype:
+                return None
+        return arrays

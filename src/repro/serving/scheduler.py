@@ -1,0 +1,243 @@
+"""RequestScheduler — the serving tier's admission and batching layer.
+
+Owns request lifecycle: the pending queue, the slot pool (continuous
+batching — freed rows are refilled with queued requests every tick, not
+only at drain), the preemption/requeue policy the allocator escalates
+to under pool pressure, and per-request latency accounting (queue wait
+and time-to-first-token, denominated in engine ticks so the numbers are
+deterministic under the virtual clock).
+
+Knobs:
+
+- ``refill_policy``: ``"continuous"`` (default) admits into every freed
+  row at each tick — the continuous-batching behaviour; ``"drain"``
+  only admits when *all* slots are empty (the naive serve-a-batch,
+  drain, serve-the-next-batch loop) and exists as the baseline the
+  benchmark's staggered-arrival scenario compares against.
+- ``prefill_token_budget``: cap on prompt tokens ingested per tick.
+  ``None`` (default) drains every pending prompt chunk before decoding
+  — the historical schedule, kept exactly so the benchmark's
+  dispatch-parity gates hold.  A finite budget interleaves chunked
+  prefill with decode: long cold prompts stop starving the tick's
+  decode dispatch, at the cost of extra prefill dispatches.
+
+The scheduler never touches device state.  Admission calls into the
+:class:`~repro.serving.cache_manager.KVCacheManager` (row reset +
+prefix stitching); the cache manager calls back into
+:meth:`preempt_for` when the page pool is exhausted — preemption policy
+(youngest-first, requeue-at-front, counter rollback) lives HERE, page
+release lives there.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.serving.types import EngineStats, Request, Slot, percentiles
+
+
+class RequestScheduler:
+    def __init__(
+        self,
+        max_batch: int,
+        stats: EngineStats,
+        *,
+        refill_policy: str = "continuous",
+        prefill_token_budget: Optional[int] = None,
+    ):
+        if refill_policy not in ("continuous", "drain"):
+            raise ValueError(
+                f"refill_policy must be continuous|drain, got {refill_policy!r}"
+            )
+        if prefill_token_budget is not None and prefill_token_budget <= 0:
+            raise ValueError("prefill_token_budget must be positive or None")
+        self.max_batch = max_batch
+        self.stats = stats
+        self.refill_policy = refill_policy
+        self.prefill_token_budget = prefill_token_budget
+        self.slots = [Slot() for _ in range(max_batch)]
+        self.pending: List[Request] = []
+        self.finished: List[Request] = []
+        self.tick = 0  # engine steps begun; the unit of all latency stats
+        self._admit_seq = 0
+        self._n_submitted = 0
+        # latency samples in ticks (appended as events happen; consumers
+        # slice by length to scope a measurement window; None = sample
+        # voided by preemption rollback)
+        self.queue_waits: List[Optional[int]] = []
+        self.ttfts: List[Optional[int]] = []
+        # wired by the engine to KVCacheManager: admission stitches
+        # prefixes, finish/preempt release pages
+        self.cache = None
+
+    # ------------------------------------------------------------- intake
+    def submit(self, reqs: List[Request]) -> None:
+        for r in reqs:
+            # per-request sampling stream: submit-order, scheduling-
+            # independent, so any admission policy draws identical samples
+            r.sample_stream = self._n_submitted
+            self._n_submitted += 1
+            if r.submit_tick < 0:
+                r.submit_tick = self.tick
+        self.pending.extend(reqs)
+
+    # ------------------------------------------------------------ admission
+    def begin_tick(self) -> None:
+        """Advance the tick clock and run the admission policy."""
+        self.tick += 1
+        self.stats.ticks += 1
+        self.refill()
+
+    def refill(self) -> None:
+        if self.refill_policy == "drain" and any(
+            s.req is not None for s in self.slots
+        ):
+            return
+        for row, slot in enumerate(self.slots):
+            if slot.req is None and self.pending:
+                self._admit(row, self.pending.pop(0))
+
+    def _admit(self, row: int, req: Request) -> None:
+        slot = self.slots[row]
+        slot.req = req
+        slot.pos = 0
+        slot.seq = self._admit_seq
+        self._admit_seq += 1
+        slot.remaining_prompt = list(req.prompt)
+        slot.hit_tokens = 0
+        slot.skipped_tokens = 0
+        req.admit_tick = self.tick
+        self.stats.admissions += 1
+        slot.wait_idx = len(self.queue_waits)
+        slot.ttft_idx = -1
+        self.queue_waits.append(self.tick - req.submit_tick)
+        # row identity comes from ENUMERATION — Slot is a value-comparing
+        # dataclass, so slots.index(slot) can return a different-but-equal
+        # slot and zero the wrong row
+        self.cache.reset_row(row)
+        self.cache.stitch_prefix(row, slot)
+
+    def has_active(self) -> bool:
+        return any(s.req is not None for s in self.slots)
+
+    # ----------------------------------------------------------- lifecycle
+    def on_token(self, row: int) -> None:
+        """Called by the executor for every accepted token."""
+        slot = self.slots[row]
+        req = slot.req
+        if req.first_token_tick < 0:
+            req.first_token_tick = self.tick
+            slot.ttft_idx = len(self.ttfts)
+            self.ttfts.append(self.tick - req.submit_tick)
+
+    def drain_finished(self) -> List[Request]:
+        """Hand over (and forget) the finished requests accumulated so
+        far.  Long-lived consumers (the queue-streaming lease) use this
+        instead of reading ``finished`` so served requests do not pile
+        up in memory for the lease's lifetime."""
+        done, self.finished = self.finished, []
+        return done
+
+    def finish(self, row: int) -> None:
+        """Retire a completed request and free its row for refill."""
+        slot = self.slots[row]
+        slot.req.done = True
+        slot.req.done_tick = self.tick
+        self.finished.append(slot.req)
+        slot.req = None
+        slot.remaining_prompt = []
+        self.cache.release_slot(row)
+
+    # ----------------------------------------------------------- preemption
+    def preempt_for(self, row: int) -> Optional[int]:
+        """Pool-pressure escalation point (called by the cache manager's
+        allocator): preempt the youngest active slot and return its row.
+        Returns None — allocator raises — when nothing is preemptable:
+        no active slot, or only ``row`` itself is active (a lone request
+        that cannot fit the pool must fail loudly, not live-lock)."""
+        victim = None
+        for i, s in enumerate(self.slots):
+            if s.req is not None and (
+                victim is None or s.seq > self.slots[victim].seq
+            ):
+                victim = i
+        others_active = any(
+            s.req is not None for j, s in enumerate(self.slots) if j != row
+        )
+        if victim is None or (victim == row and not others_active):
+            return None
+        self.preempt(victim)
+        return victim
+
+    def preempt(self, row: int) -> None:
+        """Release the slot and requeue its request at the queue front.
+        Any generated tokens are discarded — the per-request sampling
+        stream replays them identically on rerun.
+
+        Delivery counters are rolled back to what the rerun will re-earn
+        (the discarded work lands in ``tokens_discarded`` instead), so
+        ``tokens_emitted`` always equals tokens actually delivered and
+        the paged-vs-dense parity gates stay exact across preemptions.
+        The request keeps its ``submit_tick`` (its latency clock does
+        not reset) but re-earns admission and first-token times."""
+        slot = self.slots[row]
+        req = slot.req
+        self.cache.release_slot(row)
+        emitted = len(req.output)
+        ingested = min(slot.pos, len(req.prompt)) - slot.skipped_tokens
+        st = self.stats
+        st.tokens_emitted -= emitted
+        st.prompt_tokens_ingested -= ingested
+        st.tokens_discarded += emitted + ingested
+        st.prefix_hit_tokens -= slot.hit_tokens
+        st.prompt_tokens_skipped -= slot.skipped_tokens
+        req.output = []
+        req.done = False
+        req.admit_tick = -1
+        req.first_token_tick = -1
+        # void the aborted attempt's latency samples (in place: windowing
+        # by list index must stay stable); the rerun records fresh ones
+        if slot.wait_idx >= 0:
+            self.queue_waits[slot.wait_idx] = None
+        if slot.ttft_idx >= 0:
+            self.ttfts[slot.ttft_idx] = None
+        slot.req = None
+        slot.pos = 0
+        slot.remaining_prompt = []
+        slot.hit_tokens = 0
+        slot.skipped_tokens = 0
+        slot.wait_idx = -1
+        slot.ttft_idx = -1
+        self.pending.insert(0, req)
+        st.preemptions += 1
+
+    # ------------------------------------------------------------- reporting
+    def trim_samples(self, max_samples: int) -> None:
+        """Bound the latency-sample lists to their ``max_samples`` most
+        recent entries (long-lived streaming leases call this per loop;
+        their percentiles then describe the recent window).  Slots'
+        recorded sample indices are remapped so preemption rollback
+        keeps voiding the right entries; an index that falls off the
+        front is simply no longer voidable."""
+        for name in ("queue_waits", "ttfts"):
+            lst = getattr(self, name)
+            drop = len(lst) - max_samples
+            if drop <= 0:
+                continue
+            setattr(self, name, lst[drop:])
+            attr = "wait_idx" if name == "queue_waits" else "ttft_idx"
+            for slot in self.slots:
+                idx = getattr(slot, attr)
+                if idx >= 0:
+                    setattr(slot, attr, idx - drop if idx >= drop else -1)
+
+    def timing(
+        self, waits_since: int = 0, ttfts_since: int = 0
+    ) -> Dict[str, Dict[str, float]]:
+        """Queue-wait and TTFT percentile summaries (ticks).  The two
+        sample lists grow independently; callers scoping a measurement
+        window record each list's length beforehand and pass both."""
+        return {
+            "queue_wait_ticks": percentiles(self.queue_waits[waits_since:]),
+            "ttft_ticks": percentiles(self.ttfts[ttfts_since:]),
+        }

@@ -1,0 +1,136 @@
+"""Shared serving-layer types: the request/slot dataclasses and the
+engine-wide counter block.
+
+The serving tier is three layers with explicit seams
+(see ``docs/serving.md``):
+
+- :class:`repro.serving.scheduler.RequestScheduler` — admission queue,
+  continuous batching, preemption/requeue policy;
+- :class:`repro.serving.cache_manager.KVCacheManager` — the paged
+  refcounted allocator, copy-on-write, radix prefix cache and the
+  optional cross-host prefix store;
+- :class:`repro.serving.engine.ServeEngine` — the executor: jitted
+  device dispatch and sampling, nothing else.
+
+They communicate through the types here.  :class:`EngineStats` is ONE
+shared mutable counter block all three layers write into: counters are
+engine-wide facts (a preemption initiated by the allocator is rolled
+back by the scheduler and observed by the benchmark), so splitting them
+per-layer would force every consumer to re-aggregate.  Each field's
+owner is annotated; :meth:`EngineStats.snapshot` is what the
+``distributed-serve`` payload publishes to ``RESULTS.json``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import Dict, List, Optional
+
+
+@dataclass
+class Request:
+    uid: str
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0  # 0 = greedy
+    # emitting this token id finishes the request (it is kept in the
+    # output); None disables.  Checked on device via the fused done mask.
+    stop_token: Optional[int] = None
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+    # per-request sampling stream id (assigned at submit; scheduling- and
+    # slot-independent so fused and grouped modes draw identical samples)
+    sample_stream: int = field(default=0, compare=False, repr=False)
+    # scheduler timing, in engine ticks (compare-excluded: two requests
+    # with identical content are interchangeable to the batch).  -1 =
+    # not yet reached.  queue wait = admit - submit; time-to-first-token
+    # = first_token - submit.  A preempted request keeps submit_tick (its
+    # latency clock does not reset) but re-earns admit/first-token.
+    submit_tick: int = field(default=-1, compare=False, repr=False)
+    admit_tick: int = field(default=-1, compare=False, repr=False)
+    first_token_tick: int = field(default=-1, compare=False, repr=False)
+    done_tick: int = field(default=-1, compare=False, repr=False)
+
+
+@dataclass
+class Slot:
+    """One continuous-batching row: the scheduler owns the pool of these."""
+
+    req: Optional[Request] = None
+    pos: int = 0  # next cache position to write
+    remaining_prompt: List[int] = field(default_factory=list)
+    # admission order (monotonic): preemption picks the youngest = max seq
+    seq: int = -1
+    # prefix-cache stitch accounting for THIS admission (rolled back if
+    # the slot is preempted, so counters never double-count a rerun)
+    hit_tokens: int = 0
+    skipped_tokens: int = 0
+    # indices of THIS admission's latency samples in the scheduler's
+    # queue_waits/ttfts lists (-1 = none recorded): preemption voids the
+    # aborted attempt's samples so reruns are not double-counted
+    wait_idx: int = -1
+    ttft_idx: int = -1
+
+
+@dataclass
+class EngineStats:
+    """Engine-wide counters.  Owner key: [X] executor, [S] scheduler,
+    [C] cache manager.  Fields prefixed ``_`` are internal working state
+    and stay out of :meth:`snapshot`."""
+
+    # [X] dispatch accounting
+    steps_executed: int = 0  # jitted decode calls (seed-compatible name)
+    decode_dispatches: int = 0
+    prefill_dispatches: int = 0
+    dispatches: int = 0
+    tokens_emitted: int = 0
+    prompt_tokens_ingested: int = 0
+    # [S] scheduling
+    ticks: int = 0
+    admissions: int = 0
+    preemptions: int = 0
+    tokens_discarded: int = 0  # preempted work (re-earned on rerun)
+    # [C] paged pool
+    pages_in_use: int = 0
+    peak_pages: int = 0
+    page_allocs: int = 0  # lifetime allocations (> n_pages => reuse)
+    page_bytes: int = 0
+    dense_cache_bytes: int = 0
+    # [C] prefix sharing
+    prefix_hit_tokens: int = 0  # prompt tokens found in the cache
+    prompt_tokens_skipped: int = 0  # of those, never dispatched
+    pages_shared_peak: int = 0  # max pages with refcount > 1
+    cow_copies: int = 0
+    prefix_evictions: int = 0
+    _shared_pages: int = 0  # pages with refcount > 1, kept O(1)
+    # [C] cross-host prefix store
+    prefix_store_pages_published: int = 0
+    prefix_store_pages_hydrated: int = 0
+    prefix_store_tokens_hydrated: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        """Every public counter as a plain dict (RESULTS.json payload)."""
+        return {
+            f.name: getattr(self, f.name)
+            for f in fields(self)
+            if not f.name.startswith("_")
+        }
+
+
+def percentiles(samples: List[Optional[int]]) -> Dict[str, float]:
+    """Mean/p50/p90/max summary of tick-denominated latency samples.
+    ``None`` entries (samples voided by preemption rollback — kept in
+    place so windowing by list index stays stable) are excluded."""
+    s = sorted(x for x in samples if x is not None)
+    if not s:
+        return {"n": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0, "max": 0.0}
+    n = len(s)
+    return {
+        "n": n,
+        "mean": round(sum(s) / n, 3),
+        # nearest-rank percentiles: index ceil(q*n) - 1
+        "p50": float(s[(n - 1) // 2]),
+        "p90": float(s[(9 * n - 1) // 10]),
+        "max": float(s[-1]),
+    }

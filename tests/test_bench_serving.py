@@ -44,3 +44,14 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     assert sp["prefill_reduction"] >= 2.0
     assert prefix["peak_cache_bytes"] < sp["engines"]["paged"]["peak_cache_bytes"]
     assert prefix["tokens_emitted"] == sp["engines"]["fused"]["tokens_emitted"]
+    # every scenario now records queue-wait / TTFT percentiles (ticks)
+    assert fused["timing"]["ttft_ticks"]["n"] > 0
+    assert prefix["timing"]["queue_wait_ticks"]["n"] > 0
+    # continuous-batching scenario: staggered arrivals must be admitted
+    # mid-flight (rc=0 above already gates byte-identical outputs), with
+    # strictly lower mean time-to-first-token than drain-then-refill
+    cb = report["continuous_batching"]
+    cont, drain = cb["engines"]["continuous"], cb["engines"]["drain"]
+    assert cont["mean_ttft_ticks"] < drain["mean_ttft_ticks"]
+    assert cb["ttft_reduction"] > 1.0
+    assert cont["tokens_emitted"] == drain["tokens_emitted"]

@@ -246,7 +246,7 @@ def test_adaptive_total_pages_from_queue(caplog):
     assert eng.cache is None and eng.n_pages is None
     dense = ServeEngine(model, params, max_batch=4, max_len=64, prefill_chunk=4)
     want = _run(dense, _shared_requests())
-    with caplog.at_level(logging.INFO, logger="repro.serving.engine"):
+    with caplog.at_level(logging.INFO, logger="repro.serving.cache_manager"):
         got = _run(eng, _shared_requests())
     assert got == want
     dense_pages = eng.max_batch * eng.pages_per_slot
@@ -269,7 +269,7 @@ def test_adaptive_pool_grows_for_later_submits(caplog):
     dense = ServeEngine(model, params, max_batch=2, max_len=64, prefill_chunk=4)
     want = _run(dense, [Request(uid="big", prompt=list(big_prompt),
                                 max_new_tokens=8)])
-    with caplog.at_level(logging.INFO, logger="repro.serving.engine"):
+    with caplog.at_level(logging.INFO, logger="repro.serving.cache_manager"):
         got = _run(eng, [Request(uid="big", prompt=list(big_prompt),
                                  max_new_tokens=8)])
     assert got["big"] == want["big"]
