@@ -29,6 +29,17 @@ baseline (``prompt_tokens_skipped``), and its ``peak_cache_bytes`` must
 come in below the per-slot paged peak (shared pages are stored once,
 not per slot).
 
+The mid-page-divergence scenario sends prompts sharing a prefix that
+ends *inside* a page (not on a page boundary), after a priming request.
+It compares the dense fused engine, the page-aligned prefix engine
+(``prefix_match="page"``, the PR 3 behaviour) and the sub-page prefix
+engine (``prefix_match="token"``, the default): outputs must be
+byte-identical across all three, and the sub-page engine must prefill
+strictly fewer prompt tokens than the page-aligned engine — the tokens
+it recovers by copy-on-writing the partially-matched page and resuming
+prefill from the mid-page offset (``prefix_hit_tokens_partial`` /
+``cow_partial_stitches``).
+
 The staggered-arrival scenario demonstrates continuous batching: one
 long generation plus short requests arriving one per tick, run under
 ``refill_policy="continuous"`` (freed rows admit mid-flight) and the
@@ -102,6 +113,33 @@ def shared_prefix_requests(n_requests: int, max_new: int, *, prefix_len: int,
     ], prefix
 
 
+def midpage_requests(n_requests: int, max_new: int, *, prefix_len: int,
+                     tail_len: int, page_size: int, seed: int = 4):
+    """Prompts sharing a prefix that ends MID-page: page-aligned matching
+    strands the partial page's tokens; sub-page matching recovers them.
+    Returns (requests, priming prompt).  The priming prompt pads the
+    shared prefix out to a whole page, so the partially-shared chunk is
+    indexed as a FULL page later requests can partially match (only full
+    chunks are ever published)."""
+    import numpy as np
+
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, 200, size=prefix_len)]
+    pad = -prefix_len % page_size
+    prime = prefix + [int(t) for t in rng.integers(1, 200, size=pad)]
+    reqs = [
+        Request(
+            uid=f"m{i}",
+            prompt=prefix + [int(t) for t in rng.integers(1, 200, size=tail_len)],
+            max_new_tokens=max_new,
+        )
+        for i in range(n_requests)
+    ]
+    return reqs, prime
+
+
 def staggered_requests(n_requests: int, max_new: int, seed: int = 7):
     """One long-running generation plus short requests trickling in: the
     head-of-line-blocking shape where continuous batching matters.  A
@@ -129,12 +167,14 @@ _COUNTERS = (
     "decode_dispatches", "prefill_dispatches", "dispatches",
     "tokens_emitted", "prompt_tokens_ingested",
     "prompt_tokens_skipped", "prefix_hit_tokens",
+    "prefix_hit_tokens_partial", "cow_partial_stitches",
 )
 
 
 def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
                prefill_chunk: int, page_size: int = 0, total_pages: int = 0,
-               prefix_cache: bool = False, prime=None) -> dict:
+               prefix_cache: bool = False, prefix_match: str = "token",
+               prime=None) -> dict:
     from repro.serving.engine import Request, ServeEngine
 
     paged = mode.startswith("paged")
@@ -145,7 +185,8 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
         dispatch_mode="fused" if paged else mode,
         cache_mode="paged" if paged else "dense",
         **(dict(page_size=page_size, total_pages=total_pages,
-                prefix_cache=prefix_cache) if paged else {}),
+                prefix_cache=prefix_cache, prefix_match=prefix_match)
+           if paged else {}),
     )
     # compile both dispatch paths on a throwaway request OUTSIDE the timed
     # region, then measure the real workload from its very first step —
@@ -200,6 +241,7 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
         out.update(
             cache_mode="paged",
             prefix_cache=prefix_cache,
+            prefix_match=engine.cache_mgr.prefix_match,
             page_size=engine.page_size,
             total_pages=engine.n_pages,
             pages_in_use_peak=engine.peak_pages,
@@ -375,6 +417,61 @@ def main(argv=None) -> int:
                    if name == "paged_prefix" else "")
             )
 
+    # --------------------------------------- mid-page-divergence scenario
+    midpage_results = {}
+    midpage_scenario = {}
+    if model.supports_paged_cache:
+        mp_requests = 6 if args.smoke else n_requests
+        mp_batch = 2 if args.smoke else max_batch
+        # shared prefix ends MID-page: page-aligned matching reuses only
+        # the whole pages below it, sub-page matching recovers the rest
+        mp_prefix = (2 * page_size + page_size // 2) if args.smoke \
+            else (4 * page_size + page_size // 2)
+        mp_tail = 4 if args.smoke else 8
+        _, mp_prime = midpage_requests(
+            mp_requests, max_new, prefix_len=mp_prefix, tail_len=mp_tail,
+            page_size=page_size,
+        )
+        mp_pages_per_req = -(-(mp_prefix + mp_tail + max_new) // page_size)
+        mp_total_pages = (mp_batch + 1) * mp_pages_per_req
+        midpage_scenario = {
+            "n_requests": mp_requests, "max_new_tokens": max_new,
+            "max_batch": mp_batch, "max_len": max_len,
+            "prefill_chunk": prefill_chunk, "page_size": page_size,
+            "total_pages": mp_total_pages,
+            "prefix_len": mp_prefix, "tail_len": mp_tail, "primed": True,
+        }
+        for name, kwargs in (
+            ("fused", {}),
+            ("paged_prefix_page", dict(page_size=page_size,
+                                       total_pages=mp_total_pages,
+                                       prefix_cache=True,
+                                       prefix_match="page")),
+            ("paged_prefix_token", dict(page_size=page_size,
+                                        total_pages=mp_total_pages,
+                                        prefix_cache=True,
+                                        prefix_match="token")),
+        ):
+            reqs, _ = midpage_requests(
+                mp_requests, max_new, prefix_len=mp_prefix, tail_len=mp_tail,
+                page_size=page_size,
+            )
+            midpage_results[name] = run_engine(
+                model, params, reqs,
+                mode="paged" if name.startswith("paged") else name,
+                max_batch=mp_batch, max_len=max_len,
+                prefill_chunk=prefill_chunk, prime=mp_prime, **kwargs,
+            )
+            r = midpage_results[name]
+            print(
+                f"[bench_serving] midpage/{name:18s} tokens/s="
+                f"{r['tokens_per_sec']:8.1f} "
+                f"prompt_tokens={r['prompt_tokens_ingested']} "
+                f"skipped={r.get('prompt_tokens_skipped', 0)} "
+                f"partial_hits={r.get('prefix_hit_tokens_partial', 0)} "
+                f"cow_partial={r.get('cow_partial_stitches', 0)}"
+            )
+
     # ------------------------------------------- staggered-arrival scenario
     # continuous batching vs the drain-then-refill baseline: one long
     # generation plus short requests arriving one per tick
@@ -451,11 +548,24 @@ def main(argv=None) -> int:
                 sp["peak_cache_bytes"] / max(spp["peak_cache_bytes"], 1), 2
             ),
         }
+    if midpage_results:
+        mp_page = midpage_results["paged_prefix_page"]
+        mp_tok = midpage_results["paged_prefix_token"]
+        report["midpage_divergence"] = {
+            "scenario": midpage_scenario,
+            "engines": midpage_results,
+            # prompt tokens the sub-page stitch recovers beyond whole pages
+            "prefill_reduction_vs_page_aligned": round(
+                mp_page["prompt_tokens_ingested"]
+                / max(mp_tok["prompt_tokens_ingested"], 1), 2
+            ),
+        }
 
     # the byte-identity gates compare full output dicts; keep them out of
     # the written report (per-request token lists, not metrics)
     outputs = {}
     for prefix, group in (("", results), ("shared/", shared_results),
+                          ("midpage/", midpage_results),
                           ("staggered/", staggered_results)):
         for name, r in group.items():
             outputs[prefix + name] = r.pop("outputs")
@@ -468,6 +578,10 @@ def main(argv=None) -> int:
           + (f", shared-prefix prefill reduction "
              f"{report['shared_prefix']['prefill_reduction']}x"
              if shared_results else "")
+          + (f", mid-page prefill reduction "
+             f"{report['midpage_divergence']['prefill_reduction_vs_page_aligned']}x"
+             f" vs page-aligned"
+             if midpage_results else "")
           + (f", continuous-batching TTFT reduction "
              f"{report['continuous_batching']['ttft_reduction']}x"
              if staggered_results else "")
@@ -518,6 +632,32 @@ def main(argv=None) -> int:
                 >= shared_results["paged"]["peak_cache_bytes"]):
             print("[bench_serving] REGRESSION: prefix-cache peak not below "
                   "the per-slot paged peak")
+            return 1
+    if midpage_results:
+        mp = report["midpage_divergence"]
+        mp_page = midpage_results["paged_prefix_page"]
+        mp_tok = midpage_results["paged_prefix_token"]
+        # sub-page reuse must never change emitted tokens...
+        if not (outputs["midpage/fused"] == outputs["midpage/paged_prefix_page"]
+                == outputs["midpage/paged_prefix_token"]):
+            print("[bench_serving] REGRESSION: mid-page-divergence outputs "
+                  "diverged from the dense fused engine")
+            return 1
+        # ...must actually reuse tokens INSIDE the first divergent page...
+        if (mp_tok["prefix_hit_tokens_partial"] <= 0
+                or mp_tok["cow_partial_stitches"] <= 0):
+            print("[bench_serving] REGRESSION: mid-page scenario never "
+                  "stitched a partial page")
+            return 1
+        # ...and prefill strictly fewer prompt tokens than page-aligned
+        # matching at the same page size
+        if mp_tok["prompt_tokens_ingested"] >= mp_page["prompt_tokens_ingested"]:
+            print("[bench_serving] REGRESSION: sub-page matching did not "
+                  "reduce prompt tokens prefilled vs page-aligned")
+            return 1
+        if mp_page["prefix_hit_tokens_partial"] != 0:
+            print("[bench_serving] REGRESSION: page-aligned engine reported "
+                  "partial hits")
             return 1
     if staggered_results:
         # scheduling must never change tokens: both policies draw from the

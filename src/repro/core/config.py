@@ -75,6 +75,10 @@ class DSConfig:
     # for 15 consecutive minutes)
     idle_alarm_seconds: float = 15 * 60.0
     monitor_poll_seconds: float = 60.0
+    # TTL (seconds, by object mtime) for cross-host KV prefix pages under
+    # kvprefix/: the monitor sweeps expired pages at teardown.  None
+    # disables the sweep (pages persist across runs); 0 clears the prefix
+    kvprefix_ttl_seconds: Optional[float] = None
 
     # -- idempotent restart (CHECK_IF_DONE) ----------------------------------
     check_if_done: bool = True  # CHECK_IF_DONE_BOOL

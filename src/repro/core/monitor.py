@@ -167,6 +167,21 @@ class Monitor:
             swept += self.queue.delete_batch(batch)
         return swept
 
+    def _sweep_kvprefix(self) -> int:
+        """TTL-sweep the cross-host KV prefix pages (``kvprefix/``) when
+        the config opts in: without it the content-addressed store grows
+        across runs until an operator sweeps by hand.  Pages are
+        immutable and re-publishable, so expiry is always safe; workers
+        racing the sweep see a plain fetch miss."""
+        ttl = getattr(self.cfg, "kvprefix_ttl_seconds", None)
+        if ttl is None:
+            return 0
+        from repro.serving.prefix_store import PrefixStore
+
+        # the namespace only keys page hashes; sweeping is by key prefix
+        # and mtime, so any namespace value works here
+        return PrefixStore(self.store, namespace="sweep").sweep(float(ttl))
+
     def _teardown(self) -> None:
         svc_name = f"{self.cfg.app_name}Service"
         if svc_name in self.cluster.services:
@@ -177,6 +192,11 @@ class Monitor:
         swept = self._sweep_queue()
         if swept:
             self.logs.put("monitor", f"teardown sweep acked {swept} stragglers")
+        pages = self._sweep_kvprefix()
+        if pages:
+            self.logs.put(
+                "monitor", f"teardown sweep deleted {pages} expired kvprefix pages"
+            )
         self.queue.purge()  # in-flight remnants + dead letters
         n = self.logs.export(self.store, f"logs/{self.cfg.app_name}")
         self.logs.put("monitor", f"teardown complete; exported {n} log streams")

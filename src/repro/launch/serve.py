@@ -23,7 +23,8 @@ Two shapes of serving job, sharing one engine construction path:
 Engine knobs accepted from the job dict: ``max_batch``, ``max_len``,
 ``prefill_chunk``, ``dispatch_mode``, ``sample_on_device``,
 ``cache_mode``, ``page_size``, ``total_pages`` (omitted => adaptive),
-``prefix_cache``, scheduler knobs ``refill_policy`` and
+``prefix_cache``, ``prefix_match`` (``token`` = sub-page CoW reuse,
+``page`` = page-aligned only), scheduler knobs ``refill_policy`` and
 ``prefill_token_budget``, and the cross-host prefix store
 (``prefix_store`` truthy + optional ``prefix_store_namespace``): with
 the store on, completed prompts' KV pages are content-hashed into the
@@ -78,6 +79,7 @@ def _build_engine(job: Dict, ctx: WorkerContext) -> ServeEngine:
         if job.get("total_pages"):
             paged_kwargs["total_pages"] = int(job["total_pages"])
         paged_kwargs["prefix_cache"] = bool(job.get("prefix_cache", True))
+        paged_kwargs["prefix_match"] = str(job.get("prefix_match", "token"))
         if job.get("prefix_store"):
             namespace = str(
                 job.get("prefix_store_namespace")
@@ -187,6 +189,11 @@ def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
     acked = 0  # THIS worker's acks (returned as n_requests)
     idle = 0
     last_ext = ctx.clock.now()
+    # lease-start marks for the latency window, as ABSOLUTE sample ids:
+    # the per-loop trim_samples below drops old entries, and raw list
+    # lengths recorded here would silently slide to a later window —
+    # sample_marks()/timing() stay anchored across trims
+    marks = engine.scheduler.sample_marks()
     try:
         while True:
             # keep a pending backlog one batch deep so freed rows refill
@@ -281,5 +288,13 @@ def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
         if info.key.endswith(".json")
     }
     snap = _snapshot(engine)
+    # window the lease's percentiles by the recorded absolute marks; only
+    # samples still retained after trims are summarizable, and the count
+    # of trimmed-away samples is reported alongside so a bounded window
+    # is visible, not silent
+    snap["timing"] = engine.scheduler.timing(**marks)
+    snap["timing_samples_trimmed"] = (
+        engine.scheduler.waits_dropped + engine.scheduler.ttfts_dropped
+    )
     ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **snap})
     return {"n_requests": acked, **snap}

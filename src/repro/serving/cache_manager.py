@@ -61,22 +61,36 @@ class KVCacheManager:
         page_size: int = 16,
         total_pages: Optional[int] = None,
         prefix_cache: bool = True,
+        prefix_match: str = "token",
         prefix_store: Optional[PrefixStore] = None,
     ):
+        if prefix_match not in ("token", "page"):
+            raise ValueError(
+                f"prefix_match must be token|page, got {prefix_match!r}"
+            )
         self.model = model
         self.max_batch = max_batch
         self.max_len = max_len
         self.stats = stats
         self.cache_mode = cache_mode
         self.page_size = int(page_size)
+        # "token" (default) additionally reuses the longest common token
+        # prefix inside the first divergent page via a CoW copy of the
+        # partially-matched page; "page" restores page-aligned matching
+        self.prefix_match = prefix_match
         self.store = prefix_store if cache_mode == "paged" else None
         # chunk keys this engine has already published or seen present:
         # stops every later request sharing the prefix from re-paying a
         # store round-trip per chunk in prefix_insert
         self._published: set = set()
-        # wired by the engine to RequestScheduler.preempt_for: pool-
-        # pressure recovery crosses the layer seam exactly here
+        # wired by the engine to RequestScheduler.preempt_for /
+        # RequestScheduler.preempt: pool-pressure recovery crosses the
+        # layer seam exactly here.  preempt_for never victimizes the
+        # requester; when it answers YIELD the requester is requeued via
+        # preempt_row — at a clean seam AFTER the allocation loop
+        # unwinds, never mid-allocation
         self.preempt_for: Callable[[int], Optional[int]] = lambda row: None
+        self.preempt_row: Callable[[int], None] = lambda row: None
         if cache_mode == "paged":
             self.pages_per_slot = -(-max_len // self.page_size)
             self.prefix = PrefixCache(self.page_size) if prefix_cache else None
@@ -260,10 +274,14 @@ class KVCacheManager:
 
         On exhaustion, recover in escalating order: evict LRU cached
         prefixes nobody maps, then ask the scheduler (``preempt_for``)
-        to preempt the youngest active slot.  If the youngest is ``row``
-        itself it is parked in favor of older slots and ``None`` is
-        returned; the caller must drop the row from this tick.  Raises
-        only when a lone request cannot fit in the entire pool.
+        to preempt the youngest active slot strictly younger than the
+        requester — the scheduler never victimizes the requester itself
+        mid-allocation.  A ``YIELD`` answer (the requester is the
+        youngest; age priority says it is the one that must go) returns
+        ``None``: the caller unwinds its allocation loop and requeues
+        the row through :meth:`_yield_row`.  The ``victim == row`` guard
+        is defensive against foreign ``preempt_for`` implementations.
+        Raises only when a lone request cannot fit in the entire pool.
         """
         while not self._free_pages:
             if self.prefix is not None:
@@ -280,8 +298,8 @@ class KVCacheManager:
                     f"{self.page_size} tokens) with nothing evictable or "
                     "preemptable; raise total_pages or lower request length"
                 )
-            if victim == row:
-                return None
+            if victim < 0 or victim == row:
+                return None  # requester must yield (see _yield_row)
         return self._take_free_page()  # non-None: the loop freed a page
 
     def _copy_page(self, src: int, dst: int) -> None:
@@ -302,8 +320,9 @@ class KVCacheManager:
         write: any page in the write range that another holder (a sharing
         slot or the prefix cache) still references is copied to a private
         page first, so shared pages are immutable once published.  Returns
-        False if ``row`` itself was preempted while recovering pool space
-        (the caller must drop the row from this tick's dispatch).
+        False when the row could not be backed and was yielded back to
+        the queue (or preempted by another row's recovery); the caller
+        must drop it from this tick's dispatch.
         """
         need = -(-n_tokens // self.page_size)
         if need > self.pages_per_slot:
@@ -333,7 +352,7 @@ class KVCacheManager:
         while len(pages) < need:
             pid = self._alloc_page(row)
             if pid is None:
-                return False
+                return self._yield_row(row)
             self._table[row, len(pages)] = pid
             pages.append(pid)
             self._table_dirty = True
@@ -343,7 +362,7 @@ class KVCacheManager:
                 if self._page_refs[old] > 1:  # shared: copy before write
                     new = self._alloc_page(row)
                     if new is None:
-                        return False
+                        return self._yield_row(row)
                     self._copy_page(old, new)
                     self._decref(old)  # still >= 1: another slot / the cache
                     pages[j] = new
@@ -353,6 +372,40 @@ class KVCacheManager:
         if self.stats.pages_in_use > self.stats.peak_pages:
             self.stats.peak_pages = self.stats.pages_in_use
         return True
+
+    def _yield_row(self, row: int) -> bool:
+        """The requester is the youngest active slot and nothing could be
+        freed for it: age priority says IT yields.  The yield happens
+        here — after the allocation/CoW loop has fully unwound — never
+        inside ``_alloc_page`` mid-loop (the old bug: ``preempt_for``
+        could select the requesting row as victim mid-allocation and
+        hand its own freshly-released row back to the allocator).  The
+        scheduler requeues the request at the queue front and rolls its
+        counters back; the deterministic per-request sampling streams
+        make the rerun byte-identical.  Always returns False (the
+        caller's drop-this-row signal).  The engine's wiring skips the
+        requeue when the slot is already empty (a foreign ``preempt_for``
+        policy preempted it directly)."""
+        self.preempt_row(row)
+        return False
+
+    def can_admit(self) -> bool:
+        """Admission control under pool pressure (consulted by the
+        scheduler's refill): a request admitted into a pool with neither
+        a free page nor an LRU-evictable cached page can only yield
+        straight back to the queue on its first allocation (it is the
+        youngest slot, so preemption is not available to it) — a pure
+        admit/rollback churn cycle.  Holding the queue until a page
+        exists lets the active slots run to completion and open the
+        gate.  (When nothing is active every pool page is free or an
+        evictable cached leaf, so the gate can never deadlock.)"""
+        if self.cache_mode != "paged" or self.cache is None:
+            return True
+        if self._free_pages:
+            return True
+        return self.prefix is not None and self.prefix.evictable(
+            lambda p: self._page_refs[p]
+        )
 
     def release_slot(self, row: int) -> None:
         """Drop the slot's references (free-on-finish for private pages;
@@ -395,27 +448,73 @@ class KVCacheManager:
         published.  At least one prompt token is always held back and
         re-dispatched — its logits seed generation — so a full-prompt
         hit re-writes one position inside the last shared page, which
-        copy-on-write then privatizes."""
+        copy-on-write then privatizes.
+
+        With ``prefix_match="token"`` (the default) matching does not
+        stop at the last whole page: the longest common *token* prefix
+        inside the first divergent page is reused too, by copying the
+        partially-matched page into a slot-private page (the donor's
+        divergent tail is overwritten when prefill resumes from the
+        mid-page offset; until then it sits past the slot's write
+        frontier where the causal mask excludes it).  The copy is
+        best-effort: it only consumes a free page (or one LRU-evictable
+        cached page), never preempts — a miss just falls back to the
+        page-aligned stitch."""
         if self.prefix is None:
             return
         prompt = slot.req.prompt
-        path = self.prefix.match(prompt)
+
+        def lookup():
+            # page mode must not even SCAN for a partial sibling: the
+            # scan refreshes its LRU stamp, which would perturb the
+            # page-aligned baseline's eviction order
+            if self.prefix_match == "token":
+                return self.prefix.match_partial(prompt)
+            return self.prefix.match(prompt), None, 0
+
+        path, pnode, plen = lookup()
         if self.store is not None:
             n_chunks = min(len(prompt) // self.page_size, self.pages_per_slot)
             if len(path) < n_chunks and self._hydrate(
                 prompt, [n.page for n in path], n_chunks
             ):
-                path = self.prefix.match(prompt)  # now extended locally
+                # now extended locally (possibly exposing a new partial)
+                path, pnode, plen = lookup()
         path = path[: self.pages_per_slot]
         matched = len(path) * self.page_size
         eff = min(matched, len(prompt) - 1)
-        if eff <= 0:
+        # sub-page candidate: tokens reusable inside the first divergent
+        # page, capped by the hold-back (>= 1 token must be re-dispatched)
+        # and dropped when the slot's table has no room for the CoW page
+        partial = 0
+        if (
+            self.prefix_match == "token"
+            and pnode is not None
+            and len(path) < self.pages_per_slot
+        ):
+            partial = min(plen, len(prompt) - 1 - matched)
+        if eff <= 0 and partial <= 0:
             return
         pages = self._slot_pages[row]
         for j, node in enumerate(path):
             self._incref(node.page)
             self._table[row, j] = node.page
             pages.append(node.page)
+        if partial > 0:
+            pid = self._cow_partial(pnode.page, row)
+            if pid is None:
+                partial = 0  # no page to copy into: page-aligned fallback
+            else:
+                self._table[row, len(path)] = pid
+                pages.append(pid)
+                eff += partial
+                slot.hit_tokens_partial = partial
+                self.stats.prefix_hit_tokens_partial += partial
+                self.stats.cow_partial_stitches += 1
+                if self.stats.pages_in_use > self.stats.peak_pages:
+                    self.stats.peak_pages = self.stats.pages_in_use
+        if eff <= 0:
+            return
         self._table_dirty = True
         slot.pos = eff
         slot.remaining_prompt = list(prompt[eff:])
@@ -423,6 +522,29 @@ class KVCacheManager:
         slot.skipped_tokens = eff
         self.stats.prefix_hit_tokens += matched
         self.stats.prompt_tokens_skipped += eff
+
+    def _cow_partial(self, src: int, row: int) -> Optional[int]:
+        """Copy the partially-matched page ``src`` into a fresh private
+        page for ``row`` (refcount 1).  Best-effort: tries the free list,
+        then one LRU prefix eviction — never preemption (the caller is
+        mid-admission).  ``src`` is pinned by a transient raw refcount
+        bump (not :meth:`_incref`: the pin is not real sharing and must
+        not touch ``pages_shared_peak``) so the eviction pass cannot
+        reclaim the very page being copied."""
+        self._page_refs[src] += 1
+        try:
+            pid = self._take_free_page()
+            if pid is None and self.prefix is not None:
+                evicted = self.prefix.evict(1, lambda p: self._page_refs[p])
+                for e in evicted:
+                    self._decref(e)
+                self.stats.prefix_evictions += len(evicted)
+                pid = self._take_free_page()
+            if pid is not None:
+                self._copy_page(src, pid)
+            return pid
+        finally:
+            self._page_refs[src] -= 1
 
     def prefix_insert(self, row: int, prompt: List[int]) -> None:
         """Publish a freshly-ingested prompt's full pages to the radix

@@ -91,6 +91,7 @@ class ServeEngine:
         page_size: int = 16,
         total_pages: Optional[int] = None,
         prefix_cache: bool = True,
+        prefix_match: str = "token",
         prefix_store: Optional[PrefixStore] = None,
         refill_policy: str = "continuous",
         prefill_token_budget: Optional[int] = None,
@@ -144,6 +145,7 @@ class ServeEngine:
             page_size=page_size,
             total_pages=total_pages,
             prefix_cache=prefix_cache,
+            prefix_match=prefix_match,
             prefix_store=prefix_store,
         )
         self.scheduler = RequestScheduler(
@@ -154,6 +156,13 @@ class ServeEngine:
         )
         self.scheduler.cache = self.cache_mgr
         self.cache_mgr.preempt_for = self.scheduler.preempt_for
+        # the yield seam: the allocator requeues the youngest (requesting)
+        # row only after its allocation loop unwound; skip when the slot
+        # was already emptied by a direct preemption
+        self.cache_mgr.preempt_row = (
+            lambda row: self.scheduler.preempt(row)
+            if self.scheduler.slots[row].req is not None else None
+        )
 
         self.rng = np.random.default_rng(rng_seed)
         self._rng_seed = rng_seed
@@ -310,19 +319,23 @@ class ServeEngine:
             if self.cache_mode == "paged":
                 # reservation pass BEFORE building dispatch inputs: CoW /
                 # eviction / preemption all mutate slot state, and a later
-                # row's allocation may park an earlier one — the rows list
-                # below is computed only after every survivor holds pages
+                # row's allocation may preempt (or yield) an earlier one —
+                # the rows list below is computed only after every
+                # survivor holds pages.  A dropped row's slot.req is
+                # None: yielded and preempted rows alike are requeued at
+                # the clean seam and rerun byte-identically
                 for i, n in plan.items():
                     s = slots[i]
                     if s.req is not None and s.remaining_prompt:
-                        self.cache_mgr.ensure_pages(i, s.pos + n, write_start=s.pos)
+                        self.cache_mgr.ensure_pages(i, s.pos + n,
+                                                    write_start=s.pos)
             rows = [
                 i for i in plan
                 if slots[i].req is not None and slots[i].remaining_prompt
             ]
             if left is not None:
                 # refund tokens planned for rows the reservation pass
-                # dropped (preempted/parked): the tick budget promises
+                # dropped (preempted/yielded): the tick budget promises
                 # tokens INGESTED, not tokens planned
                 left += sum(plan[i] for i in plan if i not in rows)
             if not rows:
@@ -391,13 +404,17 @@ class ServeEngine:
         slots = self.scheduler.slots
         if self.cache_mode == "paged":
             # reservation pass first (see _ingest_prompts): allocation may
-            # CoW a shared page or preempt a slot, so inputs are built only
-            # from the rows that still hold their pages afterwards.  Rows
-            # held mid-prefill by the tick budget are covered too: the
-            # batch-wide dispatch still writes (garbage) KV at their pos
-            # through their LIVE page table, so a shared prefix page in
-            # that position must be privatized first — the row itself
-            # overwrites the position when its prefill resumes
+            # CoW a shared page or preempt/yield a slot, so inputs are
+            # built only from the rows that still hold their pages
+            # afterwards (a False return means the row was requeued —
+            # slot.req is None and its released table row is all OOB
+            # sentinel, so the batch-wide scatter at its stale position
+            # is dropped on device).  Rows held mid-prefill by the tick
+            # budget are covered too: the batch-wide dispatch still
+            # writes (garbage) KV at their pos through their LIVE page
+            # table, so a shared prefix page in that position must be
+            # privatized first — the row itself overwrites the position
+            # when its prefill resumes
             for i, s in enumerate(slots):
                 if s.req is not None:
                     self.cache_mgr.ensure_pages(i, s.pos + 1, write_start=s.pos)
@@ -582,6 +599,7 @@ for _name in (
     "pages_in_use", "peak_pages", "page_allocs", "page_bytes",
     "dense_cache_bytes",
     "prefix_hit_tokens", "prompt_tokens_skipped", "pages_shared_peak",
+    "prefix_hit_tokens_partial", "cow_partial_stitches",
     "cow_copies", "prefix_evictions", "preemptions", "tokens_discarded",
     "prefix_store_pages_published", "prefix_store_pages_hydrated",
     "prefix_store_tokens_hydrated",

@@ -26,6 +26,11 @@ Ownership contract (the cache is an *index*, not the allocator):
   one of its ``page_size`` positions holds a real prompt token, so a
   matched page can be referenced as-is.  Partial tail pages stay
   private to their slot.
+- Matching is not limited to whole pages: ``match_partial`` also
+  reports the longest common *token* prefix between the prompt's first
+  divergent chunk and the cached chunks branching at that point, so
+  the engine can copy-on-write the partially-matched page and resume
+  prefill from a mid-page offset (sub-page prefix reuse).
 - Eviction removes LRU **leaves** whose page the cache alone still
   references (``ref_of(page) == 1``): an interior node can only be
   evicted after its subtree, and a page some active slot still maps
@@ -91,6 +96,37 @@ class PrefixCache:
             node = child
         return path
 
+    def match_partial(
+        self, tokens: Sequence[int]
+    ) -> Tuple[List[RadixNode], "RadixNode | None", int]:
+        """Longest cached prefix of ``tokens`` at *token* granularity.
+
+        Returns ``(path, partial, n_partial)``: ``path`` is the full-page
+        node path (exactly :meth:`match`), and ``partial`` — when not
+        None — is the child of the last matched node whose key shares
+        the longest common token prefix (``n_partial >= 1`` tokens) with
+        the prompt's first divergent chunk.  The caller cannot reference
+        ``partial.page`` as-is (its tail belongs to another prompt); it
+        copy-on-writes the page and resumes prefill mid-page.
+        """
+        path = self.match(tokens)
+        node = path[-1] if path else self.root
+        start = len(path) * self.page_size
+        rest = tokens[start : start + self.page_size]
+        best, best_len = None, 0
+        if len(rest) > 0:
+            for key, child in node.children.items():
+                n = 0
+                for a, b in zip(key, rest):
+                    if a != b:
+                        break
+                    n += 1
+                if n > best_len:
+                    best, best_len = child, n
+        if best is not None:
+            best.last_used = self._clock
+        return path, best, best_len
+
     # ------------------------------------------------------------- insert
     def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> List[int]:
         """Index ``pages[j]`` as holding chunk ``j`` of ``tokens``.
@@ -115,6 +151,21 @@ class PrefixCache:
         return adopted
 
     # ------------------------------------------------------------ evict
+    def _evictable_leaves(self, ref_of: Callable[[int], int]):
+        """DFS over leaves whose page only the cache references
+        (``ref_of(page) == 1``) — the ONE definition of evictability,
+        shared by :meth:`evict` and :meth:`evictable` so the admission
+        gate can never disagree with what eviction can actually
+        reclaim."""
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            for c in n.children.values():
+                if c.children:
+                    stack.append(c)
+                elif ref_of(c.page) == 1:
+                    yield c
+
     def evict(self, want: int, ref_of: Callable[[int], int]) -> List[int]:
         """Drop up to ``want`` LRU leaf nodes whose page only the cache
         still references (``ref_of(page) == 1``) and return their page
@@ -126,15 +177,7 @@ class PrefixCache:
             # one DFS collects every currently evictable leaf; evicting a
             # whole LRU batch per pass keeps bulk recovery O(tree) per
             # exposed level instead of O(tree) per page
-            victims: List[RadixNode] = []
-            stack = [self.root]
-            while stack:
-                n = stack.pop()
-                for c in n.children.values():
-                    if c.children:
-                        stack.append(c)
-                    elif ref_of(c.page) == 1:
-                        victims.append(c)
+            victims = list(self._evictable_leaves(ref_of))
             if not victims:
                 break  # nothing evictable: every leaf is in active use
             victims.sort(key=lambda v: v.last_used)
@@ -144,6 +187,14 @@ class PrefixCache:
                 self.n_nodes -= 1
                 out.append(v.page)
         return out
+
+    def evictable(self, ref_of: Callable[[int], int]) -> bool:
+        """True when at least one leaf's page only the cache references
+        — i.e. :meth:`evict` could reclaim a page right now.  Used by
+        admission control: admitting a request when the pool has neither
+        a free nor an evictable page can only yield straight back to the
+        queue."""
+        return next(self._evictable_leaves(ref_of), None) is not None
 
     # ------------------------------------------------------------ debug
     def pages(self) -> List[int]:

@@ -36,16 +36,20 @@ atomic per page (``ObjectStore.put_bytes`` is temp-file + rename) and
 last-writer-wins — concurrent publishers write identical bytes, so the
 race is benign.  A page is published only once fully written and never
 mutated afterwards (copy-on-write privatizes shared pages before any
-write), so readers can never observe a half-warm page.  There is no
-eviction protocol: the store grows until an operator sweeps the key
-prefix, and a fetched page is trusted to match its key (shape/dtype are
-verified, token content is not re-derived).
+write), so readers can never observe a half-warm page.  Store-side
+eviction is age-based: :meth:`PrefixStore.sweep` deletes pages whose
+mtime is older than a TTL (the monitor runs it at teardown when
+``DSConfig.kvprefix_ttl_seconds`` is set); a fetched page is trusted to
+match its key (shape/dtype are verified, token content is not
+re-derived), and a sweep racing a fetch is a plain miss.
 """
 
 from __future__ import annotations
 
 import hashlib
 import io
+import time
+import zipfile
 from typing import Dict, Optional, Sequence
 
 import numpy as np
@@ -116,7 +120,10 @@ class PrefixStore:
             return None
         try:
             arrays = self.unpack(blob)
-        except (ValueError, OSError):
+        except (ValueError, OSError, zipfile.BadZipFile):
+            # BadZipFile is NOT a ValueError/OSError subclass: np.load
+            # raises it for a PK-magic blob whose zip structure is
+            # truncated/mangled (e.g. a partially swept object)
             return None  # truncated/corrupt blob: miss, not a crash
         if set(arrays) != set(like):
             return None
@@ -124,3 +131,28 @@ class PrefixStore:
             if arrays[name].shape != ref.shape or arrays[name].dtype != ref.dtype:
                 return None
         return arrays
+
+    # ------------------------------------------------------------- eviction
+    def sweep(self, ttl_s: float, now: Optional[float] = None) -> int:
+        """Delete every page under ``key_prefix/`` older than ``ttl_s``
+        seconds (by object mtime) and return the count.
+
+        This is the store-side TTL eviction for ``kvprefix/``: published
+        pages are immutable and content-addressed, so deleting a cold
+        one is always safe — the worst case is a future request
+        re-prefilling and re-publishing it.  A sweep racing a hydration
+        is the documented exists/read race: :meth:`fetch` treats the
+        vanished object as a miss.  ``ttl_s=0`` clears the whole prefix.
+        ``now`` defaults to wall-clock time (object mtimes are wall
+        clock even under a virtual-clock harness)."""
+        if now is None:
+            now = time.time()
+        swept = 0
+        # one listing walk total: list() already carries each object's
+        # mtime, and expired pages are deleted individually (delete_prefix
+        # would re-walk the whole store root per page)
+        for info in list(self.store.list(self.key_prefix + "/")):
+            if now - info.mtime >= ttl_s:
+                self.store.delete(info.key)
+                swept += 1
+        return swept

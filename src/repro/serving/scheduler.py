@@ -37,6 +37,12 @@ from repro.serving.types import EngineStats, Request, Slot, percentiles
 
 
 class RequestScheduler:
+    # sentinel returned by preempt_for: no victim younger than the
+    # requester exists — the requester itself must yield, which the
+    # allocator does at a clean seam AFTER its allocation loop unwinds
+    # (see preempt_for's docstring)
+    YIELD = -1
+
     def __init__(
         self,
         max_batch: int,
@@ -62,10 +68,15 @@ class RequestScheduler:
         self._admit_seq = 0
         self._n_submitted = 0
         # latency samples in ticks (appended as events happen; consumers
-        # slice by length to scope a measurement window; None = sample
-        # voided by preemption rollback)
+        # scope a measurement window with sample_marks()/timing(); None =
+        # sample voided by preemption rollback).  The lists are bounded by
+        # trim_samples; the *_dropped counters record how many samples
+        # fell off the front, so a mark recorded with sample_marks() stays
+        # an absolute sample id across trims
         self.queue_waits: List[Optional[int]] = []
         self.ttfts: List[Optional[int]] = []
+        self.waits_dropped = 0
+        self.ttfts_dropped = 0
         # wired by the engine to KVCacheManager: admission stitches
         # prefixes, finish/preempt release pages
         self.cache = None
@@ -95,6 +106,14 @@ class RequestScheduler:
             return
         for row, slot in enumerate(self.slots):
             if slot.req is None and self.pending:
+                # admission control: a request admitted into a pool with
+                # neither a free nor an evictable page can only yield
+                # straight back to the queue on its first allocation (as
+                # the youngest slot it has nobody to preempt) — pure
+                # admit/rollback churn; hold the queue until capacity
+                # exists — active slots finish and reopen the gate
+                if not self.cache.can_admit():
+                    break
                 self._admit(row, self.pending.pop(0))
 
     def _admit(self, row: int, req: Request) -> None:
@@ -105,6 +124,7 @@ class RequestScheduler:
         self._admit_seq += 1
         slot.remaining_prompt = list(req.prompt)
         slot.hit_tokens = 0
+        slot.hit_tokens_partial = 0
         slot.skipped_tokens = 0
         req.admit_tick = self.tick
         self.stats.admissions += 1
@@ -151,21 +171,32 @@ class RequestScheduler:
     # ----------------------------------------------------------- preemption
     def preempt_for(self, row: int) -> Optional[int]:
         """Pool-pressure escalation point (called by the cache manager's
-        allocator): preempt the youngest active slot and return its row.
-        Returns None — allocator raises — when nothing is preemptable:
-        no active slot, or only ``row`` itself is active (a lone request
-        that cannot fit the pool must fail loudly, not live-lock)."""
+        allocator): preempt the youngest active slot *other than* — and
+        strictly younger than — the requesting ``row``, and return its
+        row.  The requester is never selected as victim here: preempting
+        it mid-allocation would release the very pages being assembled
+        and hand its own row back to the allocator (the old bug).  When
+        the requester is itself the youngest active slot, age priority
+        says the requester is the one that must go — but that yield is
+        NOT performed here: ``YIELD`` is returned and the cache manager
+        requeues the row (via :meth:`preempt`) only after its allocation
+        loop has fully unwound.  Preempting an *older* slot instead
+        would invert age priority and can live-lock — two slots
+        preempting each other forever with neither finishing.  Returns
+        None — allocator raises — only when no *other* slot is active (a
+        lone request that cannot fit the pool must fail loudly, not
+        live-lock)."""
+        me = self.slots[row].seq
         victim = None
+        others = False
         for i, s in enumerate(self.slots):
-            if s.req is not None and (
-                victim is None or s.seq > self.slots[victim].seq
-            ):
+            if i == row or s.req is None:
+                continue
+            others = True
+            if s.seq > me and (victim is None or s.seq > self.slots[victim].seq):
                 victim = i
-        others_active = any(
-            s.req is not None for j, s in enumerate(self.slots) if j != row
-        )
-        if victim is None or (victim == row and not others_active):
-            return None
+        if victim is None:
+            return self.YIELD if others else None
         self.preempt(victim)
         return victim
 
@@ -190,6 +221,7 @@ class RequestScheduler:
         st.prompt_tokens_ingested -= ingested
         st.tokens_discarded += emitted + ingested
         st.prefix_hit_tokens -= slot.hit_tokens
+        st.prefix_hit_tokens_partial -= slot.hit_tokens_partial
         st.prompt_tokens_skipped -= slot.skipped_tokens
         req.output = []
         req.done = False
@@ -205,6 +237,7 @@ class RequestScheduler:
         slot.pos = 0
         slot.remaining_prompt = []
         slot.hit_tokens = 0
+        slot.hit_tokens_partial = 0
         slot.skipped_tokens = 0
         slot.wait_idx = -1
         slot.ttft_idx = -1
@@ -218,26 +251,49 @@ class RequestScheduler:
         their percentiles then describe the recent window).  Slots'
         recorded sample indices are remapped so preemption rollback
         keeps voiding the right entries; an index that falls off the
-        front is simply no longer voidable."""
-        for name in ("queue_waits", "ttfts"):
+        front is simply no longer voidable.  The cumulative
+        ``waits_dropped``/``ttfts_dropped`` offsets advance so marks
+        recorded with :meth:`sample_marks` before the trim keep
+        addressing the same samples through :meth:`timing`."""
+        for name, dropped in (("queue_waits", "waits_dropped"),
+                              ("ttfts", "ttfts_dropped")):
             lst = getattr(self, name)
             drop = len(lst) - max_samples
             if drop <= 0:
                 continue
             setattr(self, name, lst[drop:])
+            setattr(self, dropped, getattr(self, dropped) + drop)
             attr = "wait_idx" if name == "queue_waits" else "ttft_idx"
             for slot in self.slots:
                 idx = getattr(slot, attr)
                 if idx >= 0:
                     setattr(slot, attr, idx - drop if idx >= drop else -1)
 
+    def sample_marks(self) -> Dict[str, int]:
+        """Absolute sample ids marking 'now' in each latency list.  Pass
+        them to :meth:`timing` to scope a measurement window; unlike raw
+        list lengths they survive :meth:`trim_samples` (the ids count
+        every sample ever recorded, including trimmed ones)."""
+        return {
+            "waits_since": self.waits_dropped + len(self.queue_waits),
+            "ttfts_since": self.ttfts_dropped + len(self.ttfts),
+        }
+
     def timing(
         self, waits_since: int = 0, ttfts_since: int = 0
     ) -> Dict[str, Dict[str, float]]:
         """Queue-wait and TTFT percentile summaries (ticks).  The two
         sample lists grow independently; callers scoping a measurement
-        window record each list's length beforehand and pass both."""
+        window record :meth:`sample_marks` beforehand and pass both
+        values.  The arguments are *absolute* sample ids (0 = everything
+        ever recorded): samples a trim dropped are simply no longer
+        summarizable, but a pre-trim mark keeps addressing the same
+        window instead of silently sliding forward."""
         return {
-            "queue_wait_ticks": percentiles(self.queue_waits[waits_since:]),
-            "ttft_ticks": percentiles(self.ttfts[ttfts_since:]),
+            "queue_wait_ticks": percentiles(
+                self.queue_waits[max(0, waits_since - self.waits_dropped):]
+            ),
+            "ttft_ticks": percentiles(
+                self.ttfts[max(0, ttfts_since - self.ttfts_dropped):]
+            ),
         }

@@ -65,6 +65,7 @@ class Slot:
     # prefix-cache stitch accounting for THIS admission (rolled back if
     # the slot is preempted, so counters never double-count a rerun)
     hit_tokens: int = 0
+    hit_tokens_partial: int = 0  # sub-page tokens reused via CoW stitch
     skipped_tokens: int = 0
     # indices of THIS admission's latency samples in the scheduler's
     # queue_waits/ttfts lists (-1 = none recorded): preemption voids the
@@ -100,6 +101,11 @@ class EngineStats:
     # [C] prefix sharing
     prefix_hit_tokens: int = 0  # prompt tokens found in the cache
     prompt_tokens_skipped: int = 0  # of those, never dispatched
+    # sub-page reuse: tokens matched inside the first divergent page
+    # (reused through a CoW copy of the partially-matched page) and the
+    # number of such partial-page stitches performed
+    prefix_hit_tokens_partial: int = 0
+    cow_partial_stitches: int = 0
     pages_shared_peak: int = 0  # max pages with refcount > 1
     cow_copies: int = 0
     prefix_evictions: int = 0

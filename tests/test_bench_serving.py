@@ -47,6 +47,19 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     # every scenario now records queue-wait / TTFT percentiles (ticks)
     assert fused["timing"]["ttft_ticks"]["n"] > 0
     assert prefix["timing"]["queue_wait_ticks"]["n"] > 0
+    # mid-page-divergence scenario: sub-page (token-granularity) matching
+    # must recover tokens inside the first divergent page (rc=0 above
+    # already gates byte-identical outputs across dense/page/token) and
+    # prefill strictly fewer prompt tokens than page-aligned matching
+    mp = report["midpage_divergence"]
+    tok = mp["engines"]["paged_prefix_token"]
+    pg = mp["engines"]["paged_prefix_page"]
+    assert tok["prefix_hit_tokens_partial"] > 0
+    assert tok["cow_partial_stitches"] > 0
+    assert pg["prefix_hit_tokens_partial"] == 0  # page-aligned baseline
+    assert tok["prompt_tokens_ingested"] < pg["prompt_tokens_ingested"]
+    assert mp["prefill_reduction_vs_page_aligned"] > 1.0
+    assert tok["tokens_emitted"] == mp["engines"]["fused"]["tokens_emitted"]
     # continuous-batching scenario: staggered arrivals must be admitted
     # mid-flight (rc=0 above already gates byte-identical outputs), with
     # strictly lower mean time-to-first-token than drain-then-refill

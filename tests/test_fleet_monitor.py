@@ -166,6 +166,41 @@ def test_poison_jobs_end_in_dlq_without_wedging(tmp_path):
     assert rt.monitor.finished, "cluster must tear down despite poison jobs"
 
 
+def test_teardown_sweeps_expired_kvprefix_pages(tmp_path):
+    """With ``kvprefix_ttl_seconds`` set, the monitor's teardown sweep
+    deletes expired cross-host KV prefix pages from the object store
+    (ttl 0 = clear the prefix); without the knob the store is left
+    alone."""
+    import numpy as np
+
+    from repro.serving.prefix_store import PrefixStore
+
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk, kvprefix_ttl_seconds=0.0)
+    ps = PrefixStore(rt.store, "ns")
+    ps.publish("aa" * 32, {"k": np.zeros((2, 2), np.float32)})
+    ps.publish("bb" * 32, {"k": np.ones((2, 2), np.float32)})
+    rt.submit_job(JobFile(shared={"beats": 1}, groups=[{"g": 0}]))
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    runner = SimRunner(rt, tick_seconds=60.0)
+    runner.run()
+    assert rt.monitor.finished
+    assert list(rt.store.list("kvprefix/")) == []
+    assert any("kvprefix" in e["message"] for e in rt.logs.events("monitor"))
+
+    # default config (no TTL): pages persist across the run
+    clk2 = VirtualClock()
+    rt2 = _runtime(tmp_path / "2", clk2)
+    PrefixStore(rt2.store, "ns").publish(
+        "cc" * 32, {"k": np.zeros((2, 2), np.float32)}
+    )
+    rt2.submit_job(JobFile(shared={"beats": 1}, groups=[{"g": 0}]))
+    rt2.start_cluster(FleetFile(startup_seconds=0.0))
+    SimRunner(rt2, tick_seconds=60.0).run()
+    assert rt2.monitor.finished
+    assert len(list(rt2.store.list("kvprefix/"))) == 1
+
+
 def test_idle_alarm_terminates_stalled_instance(tmp_path):
     clk = VirtualClock()
     rt = _runtime(tmp_path, clk, machines=1, idle_alarm_seconds=900.0)

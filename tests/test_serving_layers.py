@@ -305,6 +305,152 @@ def test_trim_samples_bounds_lists_and_remaps_slot_indices():
     assert sched.ttfts == [1, 2, 3, 4]
     assert sched.slots[0].wait_idx == 2 and sched.slots[1].wait_idx == -1
     assert sched.slots[0].ttft_idx == 3
+    # the cumulative dropped offsets advance with the trim
+    assert sched.waits_dropped == 6 and sched.ttfts_dropped == 1
+
+
+def test_timing_marks_survive_trim():
+    """Regression: a measurement window recorded before trim_samples must
+    keep addressing the same samples afterwards.  sample_marks() returns
+    absolute sample ids and timing() windows by them, so the per-loop
+    trim in the streaming lease cannot silently slide the window."""
+    from repro.serving.scheduler import RequestScheduler
+    from repro.serving.types import EngineStats
+
+    sched = RequestScheduler(2, EngineStats())
+    sched.queue_waits = list(range(10))
+    sched.ttfts = list(range(8))
+    marks = sched.sample_marks()
+    assert marks == {"waits_since": 10, "ttfts_since": 8}
+    sched.queue_waits += [100, 200]
+    sched.ttfts += [300]
+    before = sched.timing(**marks)
+    assert before["queue_wait_ticks"]["n"] == 2
+    assert before["queue_wait_ticks"]["max"] == 200.0
+    assert before["ttft_ticks"]["n"] == 1
+    # trim away most of the history; the post-mark samples survive and
+    # the window must be unchanged (the old length-relative semantics
+    # would have summarized pre-mark samples here)
+    sched.trim_samples(3)
+    assert sched.timing(**marks) == before
+    # marks recorded AFTER a trim keep working too
+    marks2 = sched.sample_marks()
+    sched.queue_waits.append(7)
+    t = sched.timing(**marks2)
+    assert t["queue_wait_ticks"]["n"] == 1 and t["queue_wait_ticks"]["max"] == 7.0
+    # a window whose samples were entirely trimmed away degrades to the
+    # retained suffix instead of crashing or going negative
+    assert sched.timing(0, 0)["queue_wait_ticks"]["n"] == 4
+
+
+class _CacheStub:
+    """Minimal KVCacheManager stand-in for scheduler-only tests."""
+
+    def __init__(self):
+        self.released = []
+
+    def can_admit(self):
+        return True
+
+    def reset_row(self, row):
+        pass
+
+    def stitch_prefix(self, row, slot):
+        pass
+
+    def release_slot(self, row):
+        self.released.append(row)
+
+
+def test_preempt_for_never_victimizes_the_requester():
+    """Regression: pool-exhaustion escalation must never select the
+    requesting row as victim — preempting the requester mid-allocation
+    released the pages it was assembling and handed its own row back to
+    the allocator.  The victim is the youngest slot strictly younger
+    than the requester; when the requester is itself the youngest,
+    preempt_for answers YIELD without touching anything (the cache
+    manager requeues the row only after its allocation loop unwinds)."""
+    from repro.serving.scheduler import RequestScheduler
+    from repro.serving.types import EngineStats, Request
+
+    sched = RequestScheduler(3, EngineStats())
+    sched.cache = _CacheStub()
+    sched.submit([Request(uid=f"r{i}", prompt=[1, 2]) for i in range(3)])
+    sched.begin_tick()  # admits r0/r1/r2 into rows 0/1/2 (seq order)
+    assert all(s.req is not None for s in sched.slots)
+    # newest admission (row 2) triggers the escalation: preempt_for must
+    # NOT preempt it (nor any older slot) — it answers YIELD and leaves
+    # every slot untouched
+    assert sched.preempt_for(2) == RequestScheduler.YIELD
+    assert all(s.req is not None for s in sched.slots)
+    assert sched.stats.preemptions == 0 and not sched.pending
+    # escalation from the OLDEST slot preempts the youngest other
+    assert sched.preempt_for(0) == 2
+    assert sched.pending and sched.pending[0].uid == "r2"
+    assert sched.preempt_for(0) == 1
+    # nothing younger left active: requester row 0 must not preempt
+    # itself; with no other slot active at all the answer is None (the
+    # allocator raises — a lone request that cannot fit fails loudly)
+    assert sched.preempt_for(0) is None
+    assert sched.slots[0].req is not None and sched.stats.preemptions == 2
+
+
+def test_pool_exhaustion_from_newest_admission_yields_cleanly():
+    """End-to-end regression for the same bug: a late-arriving request
+    whose prefill exhausts the pool while it is the youngest slot used
+    to be preempted by preempt_for MID-allocation.  It must now yield at
+    the clean seam instead — preempt_for never returns the requester,
+    the requeue happens after the allocation loop unwinds — while the
+    older slot keeps its pages (age priority, no inversion livelock);
+    outputs stay byte-identical to the dense engine."""
+    cfg, model, params = _setup(7)
+    def drive(eng):
+        # "old" runs alone for a few ticks (its 8 total tokens fit one
+        # page), then "new" arrives with a 20-token prompt whose
+        # single-tick chunked prefill wants 3 pages — exhausting the
+        # 3-page pool while "new" is the youngest active slot
+        eng.submit([Request(uid="old", prompt=[1, 2], max_new_tokens=6,
+                            temperature=0.5)])
+        for _ in range(2):
+            eng.step()
+        eng.submit([Request(uid="new", prompt=list(range(10, 30)),
+                            max_new_tokens=4, temperature=0.5)])
+        eng.run_to_completion(max_steps=200)
+        return {r.uid: r.output for r in eng.finished}
+
+    dense = ServeEngine(model, params, max_batch=2, max_len=32,
+                        prefill_chunk=8, rng_seed=5)
+    want = drive(dense)
+    tight = ServeEngine(model, params, max_batch=2, max_len=32,
+                        prefill_chunk=8, rng_seed=5,
+                        cache_mode="paged", page_size=8, total_pages=3)
+    preempted, escalations = [], []
+    orig_preempt = tight.scheduler.preempt
+    def preempt_spy(row):
+        preempted.append(tight.slots[row].req.uid)
+        orig_preempt(row)
+    tight.scheduler.preempt = preempt_spy
+    orig_for = tight.scheduler.preempt_for
+    def for_spy(row):
+        out = orig_for(row)
+        escalations.append((row, out))
+        return out
+    tight.cache_mgr.preempt_for = for_spy
+    got = drive(tight)
+    assert escalations, "scenario never escalated to the scheduler"
+    # preempt_for never selects the requesting row as victim
+    assert all(victim != row for row, victim in escalations)
+    # the newest slot yielded (requeued at the seam) at least once...
+    from repro.serving.scheduler import RequestScheduler
+    assert any(v == RequestScheduler.YIELD for _, v in escalations)
+    assert "new" in preempted and tight.preemptions > 0
+    # ...and never dragged the older slot down with it (age priority)
+    assert "old" not in preempted, (
+        "the newcomer inverted age priority by preempting the older slot"
+    )
+    assert got == want, "yield under exhaustion changed emitted tokens"
+    assert len(got) == 2
+    assert all(r >= 0 for r in tight._page_refs)
 
 
 def test_prefix_store_refused_where_it_would_be_inert(tmp_path):
@@ -392,6 +538,34 @@ def test_prefix_store_publish_then_hydrate_across_engines(tmp_path):
     assert b.pages_in_use == len(b.prefix.pages())
 
 
+def test_prefix_store_ttl_sweep(tmp_path):
+    """sweep(ttl_s) deletes pages older than the TTL by object mtime and
+    leaves fresh ones; ttl 0 clears the prefix.  Closes the 'store grows
+    until an operator sweeps' caveat."""
+    import os
+    import time
+
+    store = ObjectStore(str(tmp_path / "store"))
+    ps = PrefixStore(store, "ns")
+    page = {"k": np.zeros((2, 2), np.float32)}
+    old_key, new_key = "aa" * 32, "bb" * 32
+    ps.publish(old_key, page)
+    ps.publish(new_key, page)
+    # age one object by rewinding its filesystem mtime 1000 s
+    old_path = os.path.join(store.root, ps._object_key(old_key))
+    past = time.time() - 1000.0
+    os.utime(old_path, (past, past))
+    assert ps.sweep(500.0) == 1
+    assert not ps.exists(old_key) and ps.exists(new_key)
+    # explicit ``now`` pins the clock (deterministic TTL arithmetic)
+    head = store.head(ps._object_key(new_key))
+    assert ps.sweep(100.0, now=head.mtime + 50.0) == 0
+    assert ps.sweep(100.0, now=head.mtime + 200.0) == 1
+    assert list(store.list("kvprefix/")) == []
+    # an empty prefix sweeps to zero, not an error
+    assert ps.sweep(0.0) == 0
+
+
 def test_prefix_store_namespace_isolation(tmp_path):
     """Different namespaces (different params identity) must never share
     pages: engine C under another namespace sees a cold store."""
@@ -426,9 +600,21 @@ def test_prefix_store_rejects_incompatible_payload(tmp_path):
     # the SECOND chunk's key: hydration stops there, no crash
     key2 = ps_store.child_key(key, PREFIX[8:16])
     store.put_bytes(f"kvprefix/{key2[:2]}/{key2}", b"not an npz")
+    # and a PK-magic-but-truncated npz (a partially written object whose
+    # zip central directory is gone): np.load raises zipfile.BadZipFile,
+    # which is neither ValueError nor OSError — must be a miss, not a
+    # worker crash
+    valid = PrefixStore.pack({"k": np.zeros((2, 2), np.float32)})
+    assert valid[:2] == b"PK"
+    key3 = ps_store.child_key(ps_store.root_key(), [77] * 8)
+    store.put_bytes(f"kvprefix/{key3[:2]}/{key3}", valid[:20])
+    assert ps_store.fetch(
+        key3, {"k": np.zeros((2, 2), np.float32)}
+    ) is None
     b = ServeEngine(model, params, max_batch=1, max_len=32, prefill_chunk=4,
                     cache_mode="paged", page_size=8, total_pages=8,
                     prefix_store=PrefixStore(store, "shared-ns"))
-    b.submit([Request(uid="x", prompt=list(PREFIX), max_new_tokens=2)])
+    b.submit([Request(uid="x", prompt=list(PREFIX), max_new_tokens=2),
+              Request(uid="y", prompt=[77] * 8 + [1, 2], max_new_tokens=2)])
     b.run_to_completion()
     assert b.prefix_store_pages_hydrated == 0
