@@ -40,6 +40,19 @@ it recovers by copy-on-writing the partially-matched page and resuming
 prefill from the mid-page offset (``prefix_hit_tokens_partial`` /
 ``cow_partial_stitches``).
 
+The decode-heavy (speculative) scenario sends short prompts with long
+generations at low batch — the latency-bound shape where nearly every
+dispatch is a decode tick and speculation pays — and compares
+``speculative="off"`` against the ``ngram`` prompt-lookup proposer and
+the ``draft`` small-model proposer on the paged engine.
+Outputs must be byte-identical across all three (the tentpole's hard
+gate: speculation may change only how many tokens land per dispatch,
+never which tokens), every speculative engine must actually verify
+(``spec_dispatches > 0``), and at least one proposer must land >= 2.0
+tokens per verify dispatch (``accepted_per_dispatch``) while strictly
+cutting dispatches/token — all counter-based and gated in smoke.  The
+>= 1.5x tokens/sec gate runs full-mode only.
+
 The staggered-arrival scenario demonstrates continuous batching: one
 long generation plus short requests arriving one per tick, run under
 ``refill_policy="continuous"`` (freed rows admit mid-flight) and the
@@ -140,6 +153,26 @@ def midpage_requests(n_requests: int, max_new: int, *, prefix_len: int,
     return reqs, prime
 
 
+def decode_heavy_requests(n_requests: int, max_new: int, seed: int = 11):
+    """Short prompts, long generations: the shape where speculative
+    decoding matters.  Almost every dispatch is a decode tick, so
+    accepted draft tokens translate ~1:1 into saved target dispatches."""
+    import numpy as np
+
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            uid=f"d{i}",
+            prompt=[int(t) for t in rng.integers(1, 200,
+                                                 size=int(rng.integers(4, 12)))],
+            max_new_tokens=max_new,
+        )
+        for i in range(n_requests)
+    ]
+
+
 def staggered_requests(n_requests: int, max_new: int, seed: int = 7):
     """One long-running generation plus short requests trickling in: the
     head-of-line-blocking shape where continuous batching matters.  A
@@ -168,12 +201,16 @@ _COUNTERS = (
     "tokens_emitted", "prompt_tokens_ingested",
     "prompt_tokens_skipped", "prefix_hit_tokens",
     "prefix_hit_tokens_partial", "cow_partial_stitches",
+    "spec_dispatches", "draft_dispatches",
+    "draft_tokens_proposed", "draft_tokens_accepted", "spec_tokens_emitted",
 )
 
 
 def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
                prefill_chunk: int, page_size: int = 0, total_pages: int = 0,
                prefix_cache: bool = False, prefix_match: str = "token",
+               speculative: str = "off", spec_k: int = 4,
+               draft_model=None, draft_params=None,
                prime=None) -> dict:
     from repro.serving.engine import Request, ServeEngine
 
@@ -187,6 +224,9 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
         **(dict(page_size=page_size, total_pages=total_pages,
                 prefix_cache=prefix_cache, prefix_match=prefix_match)
            if paged else {}),
+        **(dict(speculative=speculative, spec_k=spec_k,
+                draft_model=draft_model, draft_params=draft_params)
+           if speculative != "off" else {}),
     )
     # compile both dispatch paths on a throwaway request OUTSIDE the timed
     # region, then measure the real workload from its very first step —
@@ -227,6 +267,12 @@ def run_engine(model, params, reqs, *, mode: str, max_batch: int, max_len: int,
         **c,
         "tokens_per_sec": round(c["tokens_emitted"] / max(wall, 1e-9), 1),
         "dispatches_per_token": round(c["dispatches"] / max(total_tokens, 1), 4),
+        # tokens landed per fused verify dispatch (>1 means speculation
+        # is paying for itself; exactly the engine's accepted run + 1
+        # bonus token per live row)
+        "accepted_per_dispatch": round(
+            c["spec_tokens_emitted"] / c["spec_dispatches"], 4
+        ) if c["spec_dispatches"] else 0.0,
         "prompt_tokens_per_prefill_dispatch": round(
             c["prompt_tokens_ingested"] / max(c["prefill_dispatches"], 1), 2
         ),
@@ -472,6 +518,69 @@ def main(argv=None) -> int:
                 f"cow_partial={r.get('cow_partial_stitches', 0)}"
             )
 
+    # ------------------------------------------ decode-heavy (speculative)
+    # short prompts, long generations, low batch: the latency-bound
+    # regime speculative decoding targets — almost every dispatch is a
+    # decode tick and there is no batching to hide per-dispatch cost, so
+    # accepted drafts translate directly into fewer target dispatches
+    # and lower wall-clock per token.  "off" is the fused paged
+    # baseline; "ngram" drafts by prompt-lookup over each request's own
+    # history; "draft" runs a separately-initialised draft model (same
+    # reduced arch here — a deliberately pessimal draft whose guesses
+    # rarely land, demonstrating that byte parity and rollback hold even
+    # when every draft is rejected; a real deployment pairs a small
+    # draft arch with a large target)
+    spec_results = {}
+    spec_scenario = {}
+    if model.supports_paged_cache:
+        sd_requests = 4 if args.smoke else 8
+        # speculation pays off where prompt-lookup finds structure, and
+        # this model's greedy continuations only settle into repetitive
+        # patterns a few dozen tokens in — so the full run generates
+        # long and single-stream (the smoke run still gates parity +
+        # dispatch reduction; it keeps two rows so the spec tick's
+        # mixed live/parked row handling stays covered)
+        sd_new = 24 if args.smoke else 640
+        sd_batch = 2 if args.smoke else 1
+        sd_max_len = max_len if args.smoke else 672
+        sd_k = 8
+        sd_longest = max(len(r.prompt) + r.max_new_tokens
+                         for r in decode_heavy_requests(sd_requests, sd_new))
+        sd_total_pages = sd_batch * (-(-sd_longest // page_size))
+        spec_scenario = {
+            "n_requests": sd_requests, "max_new_tokens": sd_new,
+            "max_batch": sd_batch, "max_len": sd_max_len,
+            "prefill_chunk": prefill_chunk, "page_size": page_size,
+            "total_pages": sd_total_pages, "spec_k": sd_k,
+            "draft_arch": args.arch, "draft_init_seed": 7,
+        }
+        draft_model = Model(cfg, ModelRuntime())
+        draft_params = draft_model.init(jax.random.PRNGKey(7))
+        for name, kwargs in (
+            ("off", {}),
+            ("ngram", dict(speculative="ngram", spec_k=sd_k)),
+            ("draft", dict(speculative="draft", spec_k=sd_k,
+                           draft_model=draft_model,
+                           draft_params=draft_params)),
+        ):
+            reqs = decode_heavy_requests(sd_requests, sd_new)
+            spec_results[name] = run_engine(
+                model, params, reqs, mode="paged",
+                max_batch=sd_batch, max_len=sd_max_len,
+                prefill_chunk=prefill_chunk,
+                page_size=page_size, total_pages=sd_total_pages, **kwargs,
+            )
+            r = spec_results[name]
+            print(
+                f"[bench_serving] spec/{name:6s} tokens/s="
+                f"{r['tokens_per_sec']:8.1f} "
+                f"dispatches/token={r['dispatches_per_token']:.4f} "
+                f"accepted/dispatch={r['accepted_per_dispatch']:.2f} "
+                f"(proposed={r['draft_tokens_proposed']} "
+                f"accepted={r['draft_tokens_accepted']} "
+                f"draft_dispatches={r['draft_dispatches']})"
+            )
+
     # ------------------------------------------- staggered-arrival scenario
     # continuous batching vs the drain-then-refill baseline: one long
     # generation plus short requests arriving one per tick
@@ -548,6 +657,26 @@ def main(argv=None) -> int:
                 sp["peak_cache_bytes"] / max(spp["peak_cache_bytes"], 1), 2
             ),
         }
+    if spec_results:
+        off = spec_results["off"]
+        report["speculative"] = {
+            "scenario": spec_scenario,
+            "engines": spec_results,
+            "best_proposer": max(
+                ("ngram", "draft"),
+                key=lambda n: spec_results[n]["tokens_per_sec"],
+            ),
+            "tokens_per_sec_vs_off": {
+                n: round(spec_results[n]["tokens_per_sec"]
+                         / max(off["tokens_per_sec"], 1e-9), 3)
+                for n in ("ngram", "draft")
+            },
+            "dispatch_reduction_vs_off": {
+                n: round(off["dispatches_per_token"]
+                         / max(spec_results[n]["dispatches_per_token"], 1e-9), 2)
+                for n in ("ngram", "draft")
+            },
+        }
     if midpage_results:
         mp_page = midpage_results["paged_prefix_page"]
         mp_tok = midpage_results["paged_prefix_token"]
@@ -566,6 +695,7 @@ def main(argv=None) -> int:
     outputs = {}
     for prefix, group in (("", results), ("shared/", shared_results),
                           ("midpage/", midpage_results),
+                          ("spec/", spec_results),
                           ("staggered/", staggered_results)):
         for name, r in group.items():
             outputs[prefix + name] = r.pop("outputs")
@@ -585,6 +715,9 @@ def main(argv=None) -> int:
           + (f", continuous-batching TTFT reduction "
              f"{report['continuous_batching']['ttft_reduction']}x"
              if staggered_results else "")
+          + (f", speculative dispatch reduction "
+             f"{max(report['speculative']['dispatch_reduction_vs_off'].values())}x"
+             if spec_results else "")
           + ")")
 
     # the whole point of the fused engine: strictly fewer dispatches/token
@@ -658,6 +791,41 @@ def main(argv=None) -> int:
         if mp_page["prefix_hit_tokens_partial"] != 0:
             print("[bench_serving] REGRESSION: page-aligned engine reported "
                   "partial hits")
+            return 1
+    if spec_results:
+        # the tentpole's hard gate: speculation must never change emitted
+        # tokens — both proposers byte-identical to the plain fused engine
+        if not (outputs["spec/off"] == outputs["spec/ngram"]
+                == outputs["spec/draft"]):
+            print("[bench_serving] REGRESSION: speculative outputs diverged "
+                  "from the non-speculative engine")
+            return 1
+        for n in ("ngram", "draft"):
+            if spec_results[n]["spec_dispatches"] <= 0:
+                print(f"[bench_serving] REGRESSION: spec/{n} never ran a "
+                      "verify dispatch")
+                return 1
+        # at least one proposer must land >= 2 tokens per verify dispatch
+        # and strictly cut target dispatches per token (both counter-based
+        # and deterministic, so gated in smoke too)
+        best_acc = max(spec_results[n]["accepted_per_dispatch"]
+                       for n in ("ngram", "draft"))
+        if best_acc < 2.0:
+            print(f"[bench_serving] REGRESSION: best accepted/dispatch "
+                  f"{best_acc:.2f} < 2.0")
+            return 1
+        off_dpt = spec_results["off"]["dispatches_per_token"]
+        if min(spec_results[n]["dispatches_per_token"]
+               for n in ("ngram", "draft")) >= off_dpt:
+            print("[bench_serving] REGRESSION: no proposer reduced "
+                  "dispatches/token below the non-speculative engine")
+            return 1
+        # wall-clock gate only outside smoke (CI boxes are too noisy)
+        best_speed = max(
+            report["speculative"]["tokens_per_sec_vs_off"].values())
+        if not args.smoke and best_speed < 1.5:
+            print(f"[bench_serving] REGRESSION: best speculative tokens/sec "
+                  f"{best_speed:.2f}x off (< 1.5)")
             return 1
     if staggered_results:
         # scheduling must never change tokens: both policies draw from the

@@ -1,0 +1,140 @@
+"""Validate ``BENCH_serving.json`` and its tier-1 coverage.
+
+Two checks, both cheap enough to run inside the test suite:
+
+1. **Schema** — the report has every scenario block the benchmark is
+   supposed to produce, and every engine entry inside each block carries
+   the metric and counter keys downstream tooling (dashboards, the
+   README tables, regression diffs) reads.  A bench refactor that drops
+   or renames a field fails here instead of silently publishing an
+   incomplete report.
+2. **Coverage** — every scenario block in the report is referenced by
+   name in ``tests/test_bench_serving.py``, so no scenario can be added
+   to the benchmark without a tier-1 smoke assertion gating it.
+
+Run standalone against a written report::
+
+    PYTHONPATH=src python benchmarks/check_bench.py BENCH_serving.json
+
+or import :func:`check_report` / :func:`check_test_coverage` (the smoke
+test does both on the report it just generated).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List
+
+# every run_engine() result must carry these (the counter block mirrors
+# bench_serving._COUNTERS plus the derived rates)
+ENGINE_KEYS = (
+    "wall_s", "tokens_per_sec", "dispatches_per_token",
+    "accepted_per_dispatch", "prompt_tokens_per_prefill_dispatch",
+    "decode_dispatches", "prefill_dispatches", "dispatches",
+    "tokens_emitted", "prompt_tokens_ingested", "prompt_tokens_skipped",
+    "prefix_hit_tokens", "prefix_hit_tokens_partial",
+    "cow_partial_stitches",
+    "spec_dispatches", "draft_dispatches",
+    "draft_tokens_proposed", "draft_tokens_accepted", "spec_tokens_emitted",
+    "timing", "cache_mode",
+)
+# staggered runs go through run_staggered(), which reports scheduling
+# latency rather than the dispatch-counter block
+STAGGERED_KEYS = ("refill_policy", "wall_s", "ticks", "dispatches",
+                  "tokens_emitted", "timing", "mean_ttft_ticks")
+
+# scenario block -> (path to its engines dict, required engine names,
+# per-engine required keys, block-level derived metrics)
+SCENARIOS = {
+    "engines": (("engines",), ("grouped", "fused", "paged"), ENGINE_KEYS,
+                ("dispatch_reduction", "paged_cache_reduction")),
+    "shared_prefix": (("shared_prefix", "engines"),
+                      ("fused", "paged", "paged_prefix"), ENGINE_KEYS,
+                      ("prefill_reduction", "peak_reduction_vs_paged")),
+    "midpage_divergence": (("midpage_divergence", "engines"),
+                           ("fused", "paged_prefix_page",
+                            "paged_prefix_token"), ENGINE_KEYS,
+                           ("prefill_reduction_vs_page_aligned",)),
+    "speculative": (("speculative", "engines"),
+                    ("off", "ngram", "draft"), ENGINE_KEYS,
+                    ("best_proposer", "tokens_per_sec_vs_off",
+                     "dispatch_reduction_vs_off")),
+    "continuous_batching": (("continuous_batching", "engines"),
+                            ("continuous", "drain"), STAGGERED_KEYS,
+                            ("ttft_reduction",)),
+}
+
+
+def _dig(report: dict, path) -> dict:
+    node = report
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            raise KeyError("/".join(path))
+        node = node[key]
+    return node
+
+
+def check_report(report: dict) -> List[str]:
+    """Return a list of schema problems (empty = valid)."""
+    problems = []
+    for key in ("arch", "smoke", "scenario"):
+        if key not in report:
+            problems.append(f"missing top-level key {key!r}")
+    for name, (path, engines, engine_keys, derived) in SCENARIOS.items():
+        try:
+            block = _dig(report, path)
+        except KeyError as e:
+            problems.append(f"scenario {name!r}: missing {e.args[0]}")
+            continue
+        parent = _dig(report, path[:-1]) if len(path) > 1 else report
+        for metric in derived:
+            if metric not in parent:
+                problems.append(f"scenario {name!r}: missing derived "
+                                f"metric {metric!r}")
+        if len(path) > 1 and "scenario" not in parent:
+            problems.append(f"scenario {name!r}: missing its config dict")
+        for eng in engines:
+            if eng not in block:
+                problems.append(f"scenario {name!r}: missing engine {eng!r}")
+                continue
+            for k in engine_keys:
+                if k not in block[eng]:
+                    problems.append(
+                        f"scenario {name!r} engine {eng!r}: missing {k!r}")
+            if "outputs" in block[eng]:
+                problems.append(
+                    f"scenario {name!r} engine {eng!r}: raw per-request "
+                    "outputs belong in the gates, not the written report")
+    return problems
+
+
+def check_test_coverage(test_source: str) -> List[str]:
+    """Every scenario block must appear (quoted) in the smoke test."""
+    return [
+        f"scenario {name!r} has no tier-1 smoke assertion referencing it"
+        for name in SCENARIOS
+        if f'"{name}"' not in test_source and f"'{name}'" not in test_source
+    ]
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = argv[0] if argv else "BENCH_serving.json"
+    with open(path) as f:
+        report = json.load(f)
+    problems = check_report(report)
+    test_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "..", "tests", "test_bench_serving.py")
+    with open(test_path) as f:
+        problems += check_test_coverage(f.read())
+    for p in problems:
+        print(f"[check_bench] {p}")
+    print(f"[check_bench] {path}: "
+          + ("OK" if not problems else f"{len(problems)} problem(s)"))
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

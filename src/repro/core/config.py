@@ -79,6 +79,15 @@ class DSConfig:
     # kvprefix/: the monitor sweeps expired pages at teardown.  None
     # disables the sweep (pages persist across runs); 0 clears the prefix
     kvprefix_ttl_seconds: Optional[float] = None
+    # -- serving fleet defaults ---------------------------------------------
+    # speculative decoding for distributed-serve fleets: "off", "ngram"
+    # (prompt-lookup drafts from each request's own history) or "draft"
+    # (a small draft model with its own paged cache).  These are the
+    # fleet-level defaults operators copy into serve job templates (the
+    # job dict's "speculative"/"spec_k" keys override per job); greedy
+    # output is byte-identical either way, only tokens/dispatch changes
+    speculative: str = "off"
+    spec_k: int = 4
 
     # -- idempotent restart (CHECK_IF_DONE) ----------------------------------
     check_if_done: bool = True  # CHECK_IF_DONE_BOOL
@@ -117,6 +126,12 @@ class DSConfig:
             raise ValueError("sqs_message_visibility must be > 0")
         if self.ebs_vol_size_gb < 22:
             raise ValueError("ebs_vol_size_gb minimum allowed is 22")  # paper
+        if self.speculative not in ("off", "ngram", "draft"):
+            raise ValueError(
+                f"speculative must be off|ngram|draft, got {self.speculative!r}"
+            )
+        if self.spec_k < 1:
+            raise ValueError("spec_k must be >= 1")
 
 
 @dataclass

@@ -3,8 +3,11 @@
 The serving engine's paged KV cache stores tokens in fixed-size *pages*
 drawn from a shared pool; a per-slot *page table* maps each row's logical
 page index to a physical page id.  This kernel attends a chunk of queries
-``q[B, T]`` (``T = 1`` is plain flash-decode; ``T > 1`` is chunk-extend
-for fused prefill) against that paged cache **through the page table**,
+``q[B, T]`` (``T = 1`` is plain flash-decode; ``T > 1`` is chunk-extend,
+used both for fused prefill and as the speculative-decoding *verify*
+primitive — ``ops.paged_verify`` scores the last accepted token plus
+``k`` drafts per row in one ``T = k + 1`` launch) against that paged
+cache **through the page table**,
 without ever gathering the pages into a dense ``(B, max_len)`` cache and
 without materializing a ``(B, H, T, max_len)`` score tensor.
 

@@ -94,6 +94,41 @@ def paged_attention(
     return out.reshape(b, hkv, g, T, dv).transpose(0, 3, 1, 2, 4).reshape(b, T, h, dv)
 
 
+def paged_verify(
+    q: jax.Array,  # (B, k+1, H, dk) — last accepted token + k draft tokens
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    offsets: jax.Array,  # (B,) each row's write frontier (slot.pos)
+    *,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    v_width: int = 0,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Speculative-verify attention: score ``k + 1`` candidate positions
+    per row in one kernel launch.
+
+    This IS :func:`paged_attention`'s chunk-extend case (``T = k + 1``)
+    — the verify primitive needs nothing the extend kernel does not
+    already provide.  Query ``t`` sits at absolute position
+    ``offsets[b] + t`` and the kernel's causal mask (``kv_pos <=
+    q_pos``) scopes each draft's attention to the accepted history plus
+    the drafts before it, which is exactly the conditioning sequential
+    decode would have used — so per-position logits, and therefore the
+    engine's accept/reject decisions, are byte-identical to ``k + 1``
+    single-token decode launches.  Rejected positions need no kernel-
+    side cleanup: their K/V lands past the rewound write frontier where
+    this same mask excludes it from every later query.
+
+    Kept as a named entry so call sites (and the jnp fallback parity
+    test) can say *verify* and mean it; the dispatch is shared."""
+    return paged_attention(
+        q, k_pages, v_pages, page_table, offsets,
+        scale=scale, softcap=softcap, v_width=v_width, interpret=interpret,
+    )
+
+
 def ssd(
     x: jax.Array,  # (b, l, h, p)
     dt: jax.Array,  # (b, l, h)  (post-softplus)

@@ -30,6 +30,14 @@ Engine knobs accepted from the job dict: ``max_batch``, ``max_len``,
 the store on, completed prompts' KV pages are content-hashed into the
 shared object store and cold workers hydrate instead of re-prefilling
 (see ``docs/serving.md``).
+
+Speculative decoding knobs: ``speculative`` (``off`` | ``ngram`` |
+``draft``), ``spec_k`` (drafts per verify dispatch), and for ``draft``
+mode ``draft_arch`` / ``draft_arch_overrides`` / ``draft_init_seed``
+(the small draft model, built like the target).  Greedy output is
+byte-identical to non-speculative serving; only tokens-per-dispatch
+changes.  ``DSConfig.speculative`` / ``DSConfig.spec_k`` are the
+fleet-level defaults operators copy into serve job templates.
 """
 
 from __future__ import annotations
@@ -89,6 +97,26 @@ def _build_engine(job: Dict, ctx: WorkerContext) -> ServeEngine:
             paged_kwargs["prefix_store"] = PrefixStore(ctx.store, namespace)
     budget = job.get("prefill_token_budget")  # 0 reaches the scheduler's
     #                                           validation and is refused
+    speculative = str(job.get("speculative", "off"))
+    spec_kwargs = {}
+    if speculative != "off":
+        spec_kwargs["speculative"] = speculative
+        spec_kwargs["spec_k"] = int(job.get("spec_k", 4))
+        if speculative == "draft":
+            # the draft model is built exactly like the target (arch name
+            # + optional overrides) but is typically a much smaller
+            # config; random-init by draft_init_seed — drafts are only
+            # proposals, the target model still decides every token
+            draft_job = {
+                "arch": job.get("draft_arch", "ds-paper-100m"),
+                "arch_overrides": job.get("draft_arch_overrides", "reduced"),
+            }
+            draft_model = build_model(draft_job)
+            draft_seed = int(job.get("draft_init_seed", 0))
+            spec_kwargs["draft_model"] = draft_model
+            spec_kwargs["draft_params"] = draft_model.init(
+                jax.random.PRNGKey(draft_seed)
+            )
     return ServeEngine(
         model,
         params,
@@ -102,6 +130,7 @@ def _build_engine(job: Dict, ctx: WorkerContext) -> ServeEngine:
         prefill_token_budget=int(budget) if budget is not None else None,
         heartbeat=lambda: ctx.heartbeat(),
         **paged_kwargs,
+        **spec_kwargs,
     )
 
 
@@ -279,6 +308,9 @@ def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
                 ctx.clock.sleep(poll)
     finally:
         rq.close()
+        # lease end is a drain seam: background prefix-store publishes
+        # must be durable before the lease's counters are reported
+        engine.cache_mgr.flush_store()
     # lease-end aggregate, assembled FROM the per-request records (the
     # single source of truth); only this one-shot summary materializes
     # every completion in memory at once

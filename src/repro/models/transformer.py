@@ -1178,13 +1178,53 @@ class Model:
         — exactly what token-at-a-time decode ingestion would have produced,
         at chunk-size tokens per dispatch instead of one.
         """
+        b, T = tokens.shape
+        lengths = jnp.asarray(lengths, jnp.int32)
+        h, new_cache = self._prefill_hidden(params, cache, tokens, offsets, lengths)
+        # gather each row's last valid hidden state BEFORE the vocab matmul
+        # so the dispatch never materializes (B, T, vocab) logits
+        last = jnp.clip(lengths - 1, 0, T - 1)
+        h_last = h[jnp.arange(b), last][:, None]  # (b,1,d)
+        return self._logits(params, h_last)[:, 0], new_cache
+
+    def verify_chunk(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jax.Array,  # (B, T) right-padded [last accepted, k drafts]
+        offsets: jax.Array,  # (B,) cache position of each row's first token
+        lengths: jax.Array,  # (B,) valid tokens per row; 0 = inactive row
+    ) -> Tuple[jax.Array, Params]:
+        """Speculative-verify forward: the same fused chunk-extend as
+        :meth:`prefill_chunk` but returning EVERY position's logits
+        ``(B, T, padded_vocab)`` instead of only the last valid one.
+
+        Position ``t``'s logits are the target model's distribution for
+        the token AFTER ``tokens[b, t]``, conditioned on the cache plus
+        ``tokens[b, :t+1]`` (the causal mask inside the extend path) —
+        exactly what ``t`` sequential decode steps would produce, so the
+        serving engine's acceptance rule can compare each draft against
+        the token non-speculative decoding would have emitted.  ``T`` is
+        ``spec_k + 1`` (small), so materializing the full logits block is
+        cheap relative to the saved dispatches."""
+        h, new_cache = self._prefill_hidden(params, cache, tokens, offsets, lengths)
+        return self._logits(params, h), new_cache
+
+    def _prefill_hidden(
+        self, params: Params, cache: Params, tokens, offsets, lengths
+    ) -> Tuple[jax.Array, Params]:
+        """Shared chunk-extend backbone: embed + run the architecture's
+        extend path, returning all-position hidden states ``(B, T, d)``
+        and the updated cache.  Padded positions (``>= lengths[b]``) write
+        nothing (valid-masked / OOB-sentinel dropped) and their hidden
+        states are garbage the caller must not read."""
         cfg = self.cfg
         if not self.supports_fused_prefill:
             raise NotImplementedError(
                 f"fused prefill unsupported for arch family {cfg.family!r} "
                 "(enc-dec / vlm / moe)"
             )
-        b, T = tokens.shape
+        T = tokens.shape[1]
         offsets = jnp.asarray(offsets, jnp.int32)
         lengths = jnp.asarray(lengths, jnp.int32)
         positions = offsets[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
@@ -1204,11 +1244,7 @@ class Model:
             h, new_cache = self._prefill_mla(params, cache, x, positions, valid)
         else:
             h, new_cache = self._prefill_attn(params, cache, x, positions, valid)
-        # gather each row's last valid hidden state BEFORE the vocab matmul
-        # so the dispatch never materializes (B, T, vocab) logits
-        last = jnp.clip(lengths - 1, 0, T - 1)
-        h_last = h[jnp.arange(b), last][:, None]  # (b,1,d)
-        return self._logits(params, h_last)[:, 0], new_cache
+        return h, new_cache
 
     def _prefill_attn(self, params, cache, x, positions, valid):
         cfg, rt = self.cfg, self.rt

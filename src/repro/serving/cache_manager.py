@@ -79,6 +79,11 @@ class KVCacheManager:
         # partially-matched page; "page" restores page-aligned matching
         self.prefix_match = prefix_match
         self.store = prefix_store if cache_mode == "paged" else None
+        # background publish worker (created on first use): the tick loop
+        # snapshots page bytes + increments counters synchronously, but
+        # the object-store write itself happens off-thread.  flush_store()
+        # is the drain seam (engine drain / lease end / teardown)
+        self._publisher = None
         # chunk keys this engine has already published or seen present:
         # stops every later request sharing the prefix from re-paying a
         # store round-trip per chunk in prefix_insert
@@ -373,6 +378,54 @@ class KVCacheManager:
             self.stats.peak_pages = self.stats.pages_in_use
         return True
 
+    def reserve_speculative(
+        self, row: int, base_tokens: int, want_tokens: int,
+        write_start: Optional[int] = None,
+    ) -> Optional[int]:
+        """Back ``base_tokens`` positions with full :meth:`ensure_pages`
+        semantics (eviction -> preemption -> yield: this is what the
+        non-speculative dispatch would have demanded), then extend the
+        backing toward ``want_tokens`` *best-effort* — free pages and
+        prefix eviction only.  Draft positions are optional, so their
+        pages must never preempt another slot or raise pool exhaustion:
+        a speculative engine must run every workload the non-speculative
+        engine runs, just with fewer drafts under pressure.
+
+        Returns the number of positions backed (``>= base_tokens``), or
+        ``None`` when the row could not get even its base demand and was
+        yielded/preempted — the caller drops it from this dispatch.
+        """
+        if not self.ensure_pages(row, base_tokens, write_start=write_start):
+            return None
+        pages = self._slot_pages[row]
+        want = min(-(-want_tokens // self.page_size), self.pages_per_slot)
+        while len(pages) < want:
+            pid = self._take_free_page()
+            if pid is None and self.prefix is not None:
+                evicted = self.prefix.evict(1, lambda p: self._page_refs[p])
+                for e in evicted:
+                    self._decref(e)
+                self.stats.prefix_evictions += len(evicted)
+                pid = self._take_free_page()
+            if pid is None:
+                break
+            self._table[row, len(pages)] = pid
+            pages.append(pid)
+            self._table_dirty = True
+        # a trailing page the row holds but *shares* caps the drafts at
+        # its boundary: writing it would force a CoW copy, which drafts
+        # aren't worth (cannot happen today — rewind decrefs trailing
+        # pages and stitched pages sit below the frontier — but cheap)
+        backed = len(pages)
+        base_need = -(-base_tokens // self.page_size)
+        for j in range(base_need, len(pages)):
+            if self._page_refs[pages[j]] > 1:
+                backed = j
+                break
+        if self.stats.pages_in_use > self.stats.peak_pages:
+            self.stats.peak_pages = self.stats.pages_in_use
+        return max(base_tokens, backed * self.page_size)
+
     def _yield_row(self, row: int) -> bool:
         """The requester is the youngest active slot and nothing could be
         freed for it: age priority says IT yields.  The yield happens
@@ -421,6 +474,32 @@ class KVCacheManager:
         self._slot_pages[row] = []
         self._table[row, :] = self.n_pages
         self._table_dirty = True
+
+    def rewind_slot(self, row: int, n_tokens: int) -> None:
+        """Speculative rollback: shrink row ``row``'s backing to its first
+        ``n_tokens`` positions after a verify dispatch accepted fewer
+        tokens than were written.
+
+        Only whole pages past the new frontier are dropped (decref — a
+        page CoW-privatized for the dispatch goes straight back to the
+        free list at refcount 0; the sentinel makes any stale in-flight
+        write a device no-op).  Rejected tokens inside the kept tail page
+        need no touch-up: they sit at positions >= the slot's rewound
+        ``pos``, past every future query under the causal mask, and the
+        next dispatch's ``write_start`` overwrites them — the same
+        stale-past-the-frontier argument :meth:`reset_row` relies on.
+        The page holding position ``n_tokens - 1`` is never shared at
+        this point (ensure_pages privatized every page in the verify
+        write range), so the accepted prefix cannot be aliased away."""
+        if self.cache_mode != "paged" or self.cache is None:
+            return
+        keep = -(-n_tokens // self.page_size)
+        pages = self._slot_pages[row]
+        while len(pages) > keep:
+            pid = pages.pop()
+            self._table[row, len(pages)] = self.n_pages
+            self._table_dirty = True
+            self._decref(pid)
 
     def reset_row(self, row: int) -> None:
         """Prepare a row for a fresh admission.  Dense mode zeroes the
@@ -604,10 +683,24 @@ class KVCacheManager:
                 # one existence probe, then an unconditional write: the
                 # device->host page pull is deferred behind the probe,
                 # and a concurrent publisher writing the same key is a
-                # benign last-writer-wins race over identical bytes
-                self.store.publish(key, self._page_arrays(pages[j]))
+                # benign last-writer-wins race over identical bytes.
+                # The pull happens HERE (the pool page may be evicted and
+                # reissued before the write lands) but the serialization
+                # + store write run on the background publisher thread —
+                # counters and the memo stay synchronous/deterministic
+                if self._publisher is None:
+                    self._publisher = self.store.publisher()
+                self._publisher.submit(key, self._page_arrays(pages[j]))
                 self.stats.prefix_store_pages_published += 1
             self._published.add(key)
+
+    def flush_store(self) -> None:
+        """Drain the background publish queue (no-op without a store or
+        before the first publish).  Called at the engine's natural drain
+        seams so published pages are durable before counters are compared
+        or the process exits."""
+        if self._publisher is not None:
+            self._publisher.flush()
 
     def _hydrate(
         self, prompt: List[int], pages_so_far: List[int], n_chunks: int

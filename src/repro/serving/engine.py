@@ -64,8 +64,13 @@ import numpy as np
 from repro.models import Model
 from repro.serving.cache_manager import KVCacheManager
 from repro.serving.prefix_store import PrefixStore
-from repro.serving.sampling import make_decode_step, make_prefill_step
+from repro.serving.sampling import (
+    make_decode_step,
+    make_prefill_step,
+    make_verify_step,
+)
 from repro.serving.scheduler import RequestScheduler
+from repro.serving.speculate import DraftProposer, NgramProposer
 from repro.serving.types import EngineStats, Request, Slot
 
 __all__ = ["Request", "ServeEngine", "Slot"]
@@ -95,6 +100,10 @@ class ServeEngine:
         prefix_store: Optional[PrefixStore] = None,
         refill_policy: str = "continuous",
         prefill_token_budget: Optional[int] = None,
+        speculative: str = "off",
+        spec_k: int = 4,
+        draft_model: Optional[Model] = None,
+        draft_params=None,
     ):
         if dispatch_mode not in ("fused", "grouped"):
             raise ValueError(f"dispatch_mode must be fused|grouped, got {dispatch_mode!r}")
@@ -178,6 +187,57 @@ class ServeEngine:
             if self._use_prefill
             else None
         )
+        self.speculative = speculative
+        self.spec_k = int(spec_k)
+        self.proposer = None
+        self._verify = None
+        if speculative not in ("off", "ngram", "draft"):
+            raise ValueError(
+                f"speculative must be off|ngram|draft, got {speculative!r}"
+            )
+        if speculative == "off" and (draft_model is not None or draft_params is not None):
+            raise ValueError(
+                "draft_model/draft_params require speculative='draft'; they "
+                "would be silently inert here"
+            )
+        if speculative != "off":
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            if not sample_on_device:
+                raise ValueError(
+                    "speculative decoding verifies and accepts on device; "
+                    "sample_on_device=False would make the verify dispatch "
+                    "round-trip (B, k+1, vocab) logits — unsupported"
+                )
+            if model.cfg.family in ("ssm", "hybrid"):
+                # KV rollback is dropping pages past the frontier; a
+                # recurrent state advanced by rejected tokens cannot be
+                # rewound without checkpointing every position
+                raise ValueError(
+                    "speculative decoding cannot roll back recurrent "
+                    f"(family {model.cfg.family!r}) state; rejected draft "
+                    "tokens would corrupt the recurrence"
+                )
+            if not self._use_prefill:
+                raise ValueError(
+                    "speculative decoding verifies k+1 positions through the "
+                    "fused chunk-extend path (dispatch_mode='fused', "
+                    "prefill_chunk > 0, fused-prefill-capable arch, "
+                    "non-rolling cache); it cannot run here"
+                )
+            self._verify = jax.jit(make_verify_step(model, rng_seed))
+            if speculative == "ngram":
+                self.proposer = NgramProposer()
+            else:
+                if draft_model is None or draft_params is None:
+                    raise ValueError(
+                        "speculative='draft' needs draft_model and draft_params"
+                    )
+                self.proposer = DraftProposer(
+                    draft_model, draft_params,
+                    max_batch=max_batch, max_len=max_len, spec_k=self.spec_k,
+                    page_size=page_size, stats=self.stats,
+                )
         if prefill_token_budget is not None:
             # a finite budget holds rows mid-prefill across decode ticks.
             # For recurrent state that is corruption, not a schedule: the
@@ -276,6 +336,8 @@ class ServeEngine:
             emitted += self._ingest_prompts()
         if self.dispatch_mode == "grouped":
             emitted += self._decode_tick_grouped()
+        elif self.speculative != "off":
+            emitted += self._decode_tick_spec()
         else:
             emitted += self._decode_tick_fused()
         return emitted
@@ -510,6 +572,116 @@ class ServeEngine:
         nxt, done, lg = self._decode_dispatch(*inputs)
         return self._advance_rows(active, nxt, done, lg)
 
+    def _decode_tick_spec(self) -> int:
+        """Speculative decode tick: propose up to ``spec_k`` draft tokens
+        per decode-ready slot, verify all drafts plus the bonus position
+        in ONE fused chunk-extend dispatch through the page table, accept
+        the longest consistent run, and roll rejected positions back.
+
+        Byte parity with :meth:`_decode_tick_fused` is structural, not
+        statistical: the verify step samples position ``t`` from the
+        stream key ``(stream, len(output) + t)`` — the exact key the
+        non-speculative engine would use for that token — and emission
+        truncates at the first per-position done, so a request's output
+        is identical token-for-token no matter how many drafts were
+        proposed or accepted.  Speculation only changes how many tokens
+        land per dispatch (``accepted_per_dispatch``).  Rows whose
+        proposer returns nothing degrade to plain one-token decode
+        inside the same dispatch."""
+        B, T = self.max_batch, self.spec_k + 1
+        slots = self.scheduler.slots
+        ready = [
+            i for i, s in enumerate(slots)
+            if s.req is not None and not s.remaining_prompt
+        ]
+        if not ready:
+            return 0
+        hists = {i: slots[i].req.prompt + slots[i].req.output for i in ready}
+        drafts = self.proposer.propose(ready, hists, self.spec_k)
+        plan: Dict[int, List[int]] = {}
+        for i in ready:
+            # cap drafts so the slot can never advance past the max_len-1
+            # truncation point the non-speculative engine finishes at
+            room = self.max_len - 2 - slots[i].pos
+            plan[i] = list(drafts.get(i, []))[:max(0, room)]
+        if self.cache_mode == "paged":
+            # reservation pass first (see _build_decode_inputs): the
+            # verify dispatch writes pos .. pos+len(drafts) per row, and
+            # a later row's allocation may preempt an earlier one.  Only
+            # the base position (what plain decode would write) carries
+            # full recovery semantics; draft positions are best-effort
+            # and shrink the plan under pool pressure instead of
+            # preempting or raising — speculation must never OOM a
+            # workload the non-speculative engine serves
+            for i in ready:
+                s = slots[i]
+                if s.req is not None:
+                    got = self.cache_mgr.reserve_speculative(
+                        i, s.pos + 1, s.pos + 1 + len(plan[i]),
+                        write_start=s.pos,
+                    )
+                    if got is not None:
+                        plan[i] = plan[i][:max(0, got - (s.pos + 1))]
+        live = [i for i in ready if slots[i].req is not None]
+        if not live:
+            return 0
+        tokens = np.zeros((B, T), np.int32)
+        offsets = np.zeros((B,), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        streams = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        stops = np.full((B,), -1, np.int32)
+        max_news = np.full((B,), 1 << 30, np.int32)
+        for i in live:
+            s = slots[i]
+            d = plan[i]
+            tokens[i, 0] = s.req.output[-1] if s.req.output else s.req.prompt[-1]
+            tokens[i, 1:1 + len(d)] = d
+            offsets[i] = s.pos
+            lengths[i] = 1 + len(d)
+            temps[i] = s.req.temperature
+            streams[i] = s.req.sample_stream
+            steps[i] = len(s.req.output)
+            if s.req.stop_token is not None:
+                stops[i] = s.req.stop_token
+            max_news[i] = s.req.max_new_tokens
+            self.stats.draft_tokens_proposed += len(d)
+        self.cache_mgr.push_table()
+        tgt, n_emit, done, self.cache_mgr.cache = self._verify(
+            self.params, self.cache_mgr.cache, tokens, offsets, lengths,
+            temps, streams, steps, stops, max_news,
+        )
+        tgt, n_emit, done = np.asarray(tgt), np.asarray(n_emit), np.asarray(done)
+        self.stats.decode_dispatches += 1
+        self.stats.steps_executed += 1
+        self.stats.dispatches += 1
+        self.stats.spec_dispatches += 1
+        self.heartbeat()
+        emitted = 0
+        for i in live:
+            s = slots[i]
+            n = int(n_emit[i])
+            new_pos = s.pos + n
+            if n < int(lengths[i]):
+                # rejected positions: rewind the write frontier; trailing
+                # whole pages go back to the pool (CoW rollback), stale KV
+                # inside the kept page sits past the frontier (masked)
+                self.cache_mgr.rewind_slot(i, new_pos)
+            s.pos = new_pos
+            self.stats.draft_tokens_accepted += n - 1
+            self.stats.spec_tokens_emitted += n
+            fin = bool(done[i]) or new_pos >= self.max_len - 1
+            for t in range(n):
+                s.req.output.append(int(tgt[i, t]))
+                self.stats.tokens_emitted += 1
+                self.scheduler.on_token(i)
+            emitted += n
+            if fin:
+                self.scheduler.finish(i)
+                self.proposer.release(i)
+        return emitted
+
     def _decode_tick_grouped(self) -> int:
         """Seed-style dispatching: one jitted call per distinct slot
         position.  Every call carries the full per-row position vector, so
@@ -578,6 +750,9 @@ class ServeEngine:
         ) and steps < max_steps:
             self.step()
             steps += 1
+        # drain seam: background prefix-store publishes must be durable
+        # before callers compare counters or hand pages to another engine
+        self.cache_mgr.flush_store()
         return self.scheduler.finished
 
 
@@ -603,6 +778,8 @@ for _name in (
     "cow_copies", "prefix_evictions", "preemptions", "tokens_discarded",
     "prefix_store_pages_published", "prefix_store_pages_hydrated",
     "prefix_store_tokens_hydrated",
+    "spec_dispatches", "draft_dispatches",
+    "draft_tokens_proposed", "draft_tokens_accepted", "spec_tokens_emitted",
 ):
     setattr(ServeEngine, _name, _stats_alias(_name))
 for _name in (

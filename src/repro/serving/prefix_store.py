@@ -48,11 +48,16 @@ from __future__ import annotations
 
 import hashlib
 import io
+import logging
+import queue
+import threading
 import time
 import zipfile
 from typing import Dict, Optional, Sequence
 
 import numpy as np
+
+_LOG = logging.getLogger(__name__)
 
 
 class PrefixStore:
@@ -133,6 +138,10 @@ class PrefixStore:
         return arrays
 
     # ------------------------------------------------------------- eviction
+    def publisher(self) -> "AsyncPublisher":
+        """A background publisher bound to this store (one per call)."""
+        return AsyncPublisher(self)
+
     def sweep(self, ttl_s: float, now: Optional[float] = None) -> int:
         """Delete every page under ``key_prefix/`` older than ``ttl_s``
         seconds (by object mtime) and return the count.
@@ -156,3 +165,78 @@ class PrefixStore:
                 self.store.delete(info.key)
                 swept += 1
         return swept
+
+
+class AsyncPublisher:
+    """Single-worker background queue in front of :meth:`PrefixStore.publish`.
+
+    The engine's publish path used to serialize + write each page to the
+    object store inline with the tick loop — per-page latency the whole
+    batch's decode dispatch waited on.  This moves only the *write*
+    (npz pack + ``put_bytes``) off the hot path; everything that affects
+    engine state or counters stays synchronous at submit time:
+
+    - the caller pulls the page's device arrays to host BEFORE submitting
+      (a pool page can be evicted and reissued to another slot while the
+      write is still queued — the snapshot, not the live page, is what
+      gets published);
+    - the ``exists()`` probe, the published-key memo, and the
+      ``prefix_store_pages_published`` counter all stay on the submit
+      path, so counter values are deterministic and independent of
+      worker-thread progress.
+
+    Writes are best-effort: a failed put is logged and dropped (the page
+    simply stays cold for other workers — the same contract as a lost
+    last-writer-wins race).  Callers must :meth:`flush` at natural drain
+    points (engine drain, lease end, teardown) so published pages are
+    durable before the process exits or counters are compared across
+    engines.  The worker thread is daemonized and started lazily; after
+    :meth:`close` the publisher can be reused (a new submit restarts the
+    worker)."""
+
+    _STOP = object()
+
+    def __init__(self, store: PrefixStore):
+        self.store = store
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self.errors = 0
+
+    def submit(self, page_key: str, arrays: Dict[str, np.ndarray]) -> None:
+        """Enqueue one page write (arrays must already be host-resident
+        snapshots; see class docstring)."""
+        with self._lock:
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(
+                    target=self._run, name="kvprefix-publisher", daemon=True
+                )
+                self._thread.start()
+            self._q.put((page_key, arrays))
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is self._STOP:
+                    return
+                page_key, arrays = item
+                self.store.publish(page_key, arrays)
+            except Exception:  # noqa: BLE001 - best-effort, never kill the worker
+                self.errors += 1
+                _LOG.exception("async prefix-store publish failed (dropped)")
+            finally:
+                self._q.task_done()
+
+    def flush(self) -> None:
+        """Block until every submitted write has been attempted."""
+        self._q.join()
+
+    def close(self) -> None:
+        """Flush, then stop the worker thread (restartable)."""
+        self.flush()
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                self._q.put(self._STOP)
+                self._thread.join()
+            self._thread = None

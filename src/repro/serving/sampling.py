@@ -70,6 +70,88 @@ def done_mask(
     return jnp.logical_or(hit_stop, steps + 1 >= max_news)
 
 
+def sample_tokens_chunk(
+    logits: jax.Array,  # (B, T, V) unnormalized, one position per draft slot
+    temps: jax.Array,  # (B,)
+    streams: jax.Array,  # (B,)
+    steps: jax.Array,  # (B,) tokens already generated BEFORE this chunk
+    *,
+    base_seed: int,
+) -> jax.Array:
+    """Per-position sampling for the speculative verify dispatch.
+
+    Position ``t`` of row ``b`` draws from the stream key ``(streams[b],
+    steps[b] + t)`` — the exact key sequential decoding would use for its
+    ``steps[b] + t``-th token.  Because the key depends only on (stream,
+    token index) and each position's draw is elementwise independent, the
+    verified tokens are byte-identical to what ``T`` non-speculative
+    decode dispatches would have sampled, for greedy AND temperature rows
+    alike (no rejection-resampling correction is needed)."""
+    B, T, V = logits.shape
+    t_idx = jnp.arange(T, dtype=jnp.int32)
+    flat = sample_tokens(
+        logits.reshape(B * T, V),
+        jnp.broadcast_to(temps[:, None], (B, T)).reshape(-1),
+        jnp.broadcast_to(streams[:, None], (B, T)).reshape(-1),
+        (steps[:, None] + t_idx[None, :]).reshape(-1),
+        base_seed=base_seed,
+    )
+    return flat.reshape(B, T)
+
+
+def make_verify_step(model, base_seed: int) -> Callable:
+    """Build the speculative-verify jit target: one fused chunk-extend
+    dispatch scores all ``k+1`` positions (last accepted token + ``k``
+    draft tokens), samples the target token at every position, and
+    applies the longest-consistent-run acceptance rule on device.
+
+    Inputs per row: ``tokens[b] = [x0, d1 .. dm, pad...]`` where ``x0``
+    is the last accepted token and ``d1..dm`` the proposer's drafts
+    (``lengths[b] = 1 + m``; ``lengths[b] = 0`` parks the row).  The
+    target token at position ``t`` is what non-speculative decode would
+    emit after consuming ``tokens[b, :t+1]``; draft ``d_{t+1}`` is
+    *consistent* iff it equals that target.  The row emits
+    ``tgt[b, :n_emit[b]]``: the accepted run plus the bonus token from
+    the first inconsistent (or last) position, truncated at the first
+    position whose emitted token finishes the request (stop token or
+    new-token budget) — sequential decode would never have sampled past
+    it.  Rejected positions' KV stays in the cache past the rewound
+    write frontier, where the causal mask excludes it, until the cache
+    manager drops/overwrites it.
+
+    Returns ``(tgt (B, T), n_emit (B,), done (B,), cache)``."""
+    vocab = model.cfg.vocab_size
+
+    def step(params, cache, tokens, offsets, lengths, temps, streams, steps,
+             stops, max_news):
+        logits, cache = model.verify_chunk(params, cache, tokens, offsets, lengths)
+        B, T = tokens.shape
+        t_idx = jnp.arange(T, dtype=jnp.int32)
+        tgt = sample_tokens_chunk(
+            logits[:, :, :vocab], temps, streams, steps, base_seed=base_seed
+        )
+        # longest greedy-consistent run: draft t+1 survives iff it exists
+        # (inside lengths) and every draft before it survived
+        is_draft = t_idx[None, 1:] < lengths[:, None]
+        match = jnp.logical_and(tokens[:, 1:] == tgt[:, :-1], is_draft)
+        n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        emit_cap = n_acc + 1  # accepted run + the bonus target token
+        # per-position done: emitting tgt[b, t] is the request's
+        # (steps[b] + t + 1)-th token — budget and stop checks per slot
+        hit_stop = jnp.logical_and(stops[:, None] >= 0, tgt == stops[:, None])
+        over = steps[:, None] + t_idx[None, :] + 1 >= max_news[:, None]
+        pos_done = jnp.logical_and(
+            jnp.logical_or(hit_stop, over), t_idx[None, :] < emit_cap[:, None]
+        )
+        any_done = jnp.any(pos_done, axis=1)
+        first_done = jnp.argmax(pos_done, axis=1)
+        n_emit = jnp.where(any_done, first_done + 1, emit_cap)
+        n_emit = jnp.where(lengths > 0, n_emit, 0).astype(jnp.int32)
+        return tgt, n_emit, any_done, cache
+
+    return step
+
+
 def make_decode_step(model, base_seed: int, on_device: bool) -> Callable:
     """Build the engine's jit target: vectorized-position decode, with
     sampling + stop-token done mask fused on-device (default) or raw

@@ -1,0 +1,307 @@
+"""Speculative-decoding proposers for the serving engine.
+
+Speculative decoding splits each decode tick into *propose* (cheap:
+guess ``k`` candidate tokens per active slot) and *verify* (one fused
+chunk-extend dispatch of the target model scores all ``k + 1`` positions
+through the page table and accepts the longest consistent run — see
+``repro.serving.sampling.make_verify_step``).  The engine is agnostic to
+where drafts come from; this module provides the two proposers behind
+one interface:
+
+- :class:`NgramProposer` — prompt-lookup decoding: index the n-gram
+  continuations seen in the slot's own token history (prompt + generated
+  output) and roll the modal continuation of the current suffix forward
+  ``k`` tokens.  Zero device work; it shines on repetitive continuations
+  (templated output, code, retrieved context echoed back).
+- :class:`DraftProposer` — a small draft model (e.g. a reduced
+  ``ds_paper_100m``) running greedy decode ahead of the target, with its
+  OWN paged KV cache.  The draft cache mirrors the slot's accepted
+  history; after each verify the engine's accepted count shows up as a
+  shorter/longer history and the proposer resyncs by longest-common-
+  prefix — rejected draft KV is rewound exactly like the target's
+  (``KVCacheManager.rewind_slot``), never recomputed from scratch.
+
+Contract (both proposers):
+
+- ``propose(rows, histories, k)`` returns ``{row: [d1..dm]}``, ``m <= k``
+  (an absent row or empty list degrades that row to plain decode inside
+  the same verify dispatch — proposing nothing is always safe);
+- proposals are *guesses*: nothing the proposer does may influence the
+  target model's sampled tokens, only how many of them land per
+  dispatch.  Byte parity with non-speculative decoding is enforced by
+  the verify step, not trusted from here;
+- ``release(row)`` drops per-row state when the engine retires the slot
+  (best-effort: a stale row is also resynced lazily on its next
+  propose, so preemptions that bypass the engine's tick are safe).
+"""
+
+from __future__ import annotations
+
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class NgramProposer:
+    """Prompt-lookup proposer: modal n-gram continuation over the slot's
+    own history.
+
+    Per row, an order-``n`` continuation table (for ``n`` in
+    ``min_ngram..max_ngram``) counts every next-token seen after each
+    n-gram of the history.  A draft rolls forward from the current
+    suffix: at each of the ``k`` steps the longest n-gram with any
+    recorded continuation votes, majority wins (falling back to shorter
+    n-grams), and the predicted token extends the *lookup context only*
+    — hypothetical tokens are never counted into the tables.  Taking the
+    modal continuation instead of the single most recent occurrence
+    (classic prompt-lookup) is markedly more robust on bursty-repetitive
+    output, where the most recent occurrence is often the one break in
+    an otherwise stable pattern.
+
+    The tables update incrementally as a row's history grows (appends
+    cost ``O(new tokens * max_ngram)`` per tick); any history that is
+    not an extension of what was indexed — preemption, re-admission,
+    slot reuse — triggers a rebuild, so rows may change identity without
+    notice.  No device work; the draft "model" is the sequence's own
+    self-similarity."""
+
+    kind = "ngram"
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if max_ngram < min_ngram or min_ngram < 1:
+            raise ValueError(
+                f"need max_ngram >= min_ngram >= 1, got {max_ngram}/{min_ngram}"
+            )
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        # per row: indexed history copy + {n: {ngram: Counter(next)}}
+        self._hist: Dict[int, List[int]] = {}
+        self._tables: Dict[int, Dict[int, Dict[tuple, Counter]]] = {}
+
+    def _update(self, row: int, hist: List[int]) -> None:
+        old = self._hist.get(row)
+        if old is None or len(old) > len(hist) or old != hist[:len(old)]:
+            self._tables[row] = {
+                n: defaultdict(Counter)
+                for n in range(self.min_ngram, self.max_ngram + 1)
+            }
+            start = 0
+        else:
+            start = len(old)
+        tables = self._tables[row]
+        for n in range(self.min_ngram, self.max_ngram + 1):
+            for i in range(max(n, start), len(hist)):
+                tables[n][tuple(hist[i - n:i])][hist[i]] += 1
+        self._hist[row] = list(hist)
+
+    def propose(
+        self, rows: Sequence[int], histories: Dict[int, List[int]], k: int
+    ) -> Dict[int, List[int]]:
+        out = {}
+        for i in rows:
+            self._update(i, histories[i])
+            out[i] = self._roll(i, histories[i], k)
+        return out
+
+    def _roll(self, row: int, hist: List[int], k: int) -> List[int]:
+        tables = self._tables[row]
+        ctx = list(hist)
+        drafts: List[int] = []
+        for _ in range(k):
+            nxt = None
+            for n in range(min(self.max_ngram, len(ctx)),
+                           self.min_ngram - 1, -1):
+                votes = tables[n].get(tuple(ctx[-n:]))
+                if votes:
+                    nxt = votes.most_common(1)[0][0]
+                    break
+            if nxt is None:
+                break
+            drafts.append(nxt)
+            ctx.append(nxt)
+        return drafts
+
+    def release(self, row: int) -> None:
+        self._hist.pop(row, None)
+        self._tables.pop(row, None)
+
+
+class DraftProposer:
+    """Small-model proposer with its own paged KV cache.
+
+    The draft model greedily decodes ``k`` tokens ahead of the target
+    from the slot's accepted history.  Its cache is managed by a private
+    :class:`~repro.serving.cache_manager.KVCacheManager` sized to the
+    full per-slot reservation (the draft pool can never hit pressure, so
+    it never evicts or preempts — recovery policy stays the target
+    engine's business).
+
+    Resync discipline: per row we record exactly which token prefix the
+    draft cache holds KV for.  On each propose the row's current history
+    is longest-common-prefix matched against that record; everything
+    past the match is rewound (the verify step rejected it, or the slot
+    was re-admitted with a different request) and the missing history
+    suffix is caught up via the draft model's fused chunked prefill.
+    After a fully-accepted verify the whole k-token draft KV is already
+    resident, so steady state is zero catch-up prefill + ``k`` decode
+    dispatches per tick.
+
+    ``stats`` is the TARGET engine's counter block: draft device calls
+    land in ``draft_dispatches`` (kept separate from ``dispatches`` so
+    dispatches/token still describes the target model).  The private
+    cache manager gets its own throwaway stats so draft pages never
+    pollute the target's paged-pool accounting."""
+
+    kind = "draft"
+    _CATCHUP_CHUNK = 32
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        max_batch: int,
+        max_len: int,
+        spec_k: int,
+        page_size: int = 16,
+        stats=None,
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.serving.cache_manager import KVCacheManager
+        from repro.serving.types import EngineStats
+
+        if not model.supports_paged_cache:
+            raise ValueError(
+                "draft proposer needs a pageable draft-model KV cache; arch "
+                f"{model.cfg.name!r} (family {model.cfg.family!r}) has none"
+            )
+        if not model.supports_fused_prefill:
+            raise ValueError(
+                "draft proposer catches up history via fused prefill; arch "
+                f"{model.cfg.name!r} does not support it"
+            )
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.stats = stats
+        # drafting runs up to spec_k positions past the target's frontier
+        # (the last of which the target may reject), so the draft slot
+        # reservation is max_len + spec_k positions, fully pre-reserved:
+        # pressure-free by construction
+        draft_len = max_len + spec_k
+        pages_per_slot = -(-draft_len // page_size)
+        self.cache = KVCacheManager(
+            model,
+            max_batch=max_batch,
+            max_len=draft_len,
+            stats=EngineStats(),
+            cache_mode="paged",
+            page_size=page_size,
+            total_pages=max_batch * pages_per_slot,
+            prefix_cache=False,
+        )
+        # tokens whose KV is resident per row, positions 0..len-1 (the
+        # ground truth for lazy resync; never trust row identity)
+        self._tokens: List[List[int]] = [[] for _ in range(max_batch)]
+        vocab = model.cfg.vocab_size
+
+        def prefill(params, cache, tokens, offsets, lengths):
+            _, cache = model.prefill_chunk(params, cache, tokens, offsets, lengths)
+            return cache
+
+        def decode(params, cache, tokens, pos):
+            logits, cache = model.decode_step(params, cache, tokens, pos)
+            nxt = jnp.argmax(logits[:, 0, :vocab], axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    # ---------------------------------------------------------------- state
+    def _resync(self, rows, histories) -> None:
+        """Rewind each row's draft cache to the longest common prefix of
+        its resident tokens and the slot's current accepted history."""
+        for i in rows:
+            hist, res = histories[i], self._tokens[i]
+            lcp = 0
+            for a, b in zip(res, hist):
+                if a != b:
+                    break
+                lcp += 1
+            if lcp < len(res):
+                self.cache.rewind_slot(i, lcp)
+                del res[lcp:]
+
+    def release(self, row: int) -> None:
+        self.cache.rewind_slot(row, 0)
+        self._tokens[row] = []
+
+    # -------------------------------------------------------------- propose
+    def propose(
+        self, rows: Sequence[int], histories: Dict[int, List[int]], k: int
+    ) -> Dict[int, List[int]]:
+        rows = [i for i in rows if len(histories[i]) > 0]
+        if not rows or k <= 0:
+            return {}
+        self._resync(rows, histories)
+        # catch-up: make hist[:-1] resident (the final history token is
+        # fed through the decode path below so its logits seed drafting)
+        self._catch_up(rows, histories)
+        B = self.max_batch
+        drafts: Dict[int, List[int]] = {i: [] for i in rows}
+        feed = {i: histories[i][-1] for i in rows}
+        for _ in range(k):
+            tokens = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            for i in rows:
+                # decode writes KV at the row's frontier; pre-reserved
+                # pool: ensure_pages can neither yield nor preempt here
+                self.cache.ensure_pages(i, len(self._tokens[i]) + 1,
+                                        write_start=len(self._tokens[i]))
+                tokens[i, 0] = feed[i]
+                pos[i] = len(self._tokens[i])
+            self.cache.push_table()
+            nxt, self.cache.cache = self._decode(
+                self.params, self.cache.cache, tokens, pos
+            )
+            nxt = np.asarray(nxt)
+            if self.stats is not None:
+                self.stats.draft_dispatches += 1
+            for i in rows:
+                self._tokens[i].append(feed[i])
+                feed[i] = int(nxt[i])
+                drafts[i].append(feed[i])
+        return drafts
+
+    def _catch_up(self, rows, histories) -> None:
+        B, C = self.max_batch, self._CATCHUP_CHUNK
+        while True:
+            todo = [i for i in rows
+                    if len(self._tokens[i]) < len(histories[i]) - 1]
+            if not todo:
+                return
+            tokens = np.zeros((B, C), np.int32)
+            offsets = np.zeros((B,), np.int32)
+            lengths = np.zeros((B,), np.int32)
+            plan: Dict[int, List[int]] = {}
+            for i in todo:
+                res = len(self._tokens[i])
+                chunk = histories[i][res:res + C]
+                if len(chunk) > len(histories[i]) - 1 - res:
+                    chunk = chunk[:len(histories[i]) - 1 - res]
+                self.cache.ensure_pages(i, res + len(chunk), write_start=res)
+                tokens[i, :len(chunk)] = chunk
+                offsets[i] = res
+                lengths[i] = len(chunk)
+                plan[i] = chunk
+            self.cache.push_table()
+            self.cache.cache = self._prefill(
+                self.params, self.cache.cache, tokens, offsets, lengths
+            )
+            if self.stats is not None:
+                self.stats.draft_dispatches += 1
+            for i, chunk in plan.items():
+                self._tokens[i].extend(chunk)

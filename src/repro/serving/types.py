@@ -114,14 +114,32 @@ class EngineStats:
     prefix_store_pages_published: int = 0
     prefix_store_pages_hydrated: int = 0
     prefix_store_tokens_hydrated: int = 0
+    # [X] speculative decoding.  One spec_dispatch is one fused verify
+    # call (counted in decode_dispatches too — it replaces exactly one
+    # decode dispatch); draft_dispatches are the draft model's own device
+    # calls (catch-up prefill + per-draft-token decode), kept separate so
+    # dispatches/token still describes the TARGET model.  Acceptance rate
+    # is draft_tokens_accepted / draft_tokens_proposed; the headline
+    # accepted_per_dispatch (accepted + bonus tokens per verify call) is
+    # derived in snapshot().
+    spec_dispatches: int = 0
+    draft_dispatches: int = 0
+    draft_tokens_proposed: int = 0
+    draft_tokens_accepted: int = 0
+    spec_tokens_emitted: int = 0  # all tokens emitted by verify dispatches
 
     def snapshot(self) -> Dict[str, int]:
-        """Every public counter as a plain dict (RESULTS.json payload)."""
-        return {
+        """Every public counter as a plain dict (RESULTS.json payload),
+        plus derived speculative-decoding rates."""
+        snap = {
             f.name: getattr(self, f.name)
             for f in fields(self)
             if not f.name.startswith("_")
         }
+        snap["accepted_per_dispatch"] = round(
+            self.spec_tokens_emitted / self.spec_dispatches, 4
+        ) if self.spec_dispatches else 0.0
+        return snap
 
 
 def percentiles(samples: List[Optional[int]]) -> Dict[str, float]:

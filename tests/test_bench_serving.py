@@ -9,6 +9,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
 
 import bench_serving
+import check_bench
 
 
 def test_bench_serving_smoke_dispatch_reduction(tmp_path):
@@ -60,6 +61,24 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     assert tok["prompt_tokens_ingested"] < pg["prompt_tokens_ingested"]
     assert mp["prefill_reduction_vs_page_aligned"] > 1.0
     assert tok["tokens_emitted"] == mp["engines"]["fused"]["tokens_emitted"]
+    # decode-heavy speculative scenario: rc=0 above already gates
+    # byte-identical outputs across off/ngram/draft — here assert both
+    # proposers actually speculated and that the ngram proposer cut
+    # target dispatches per token (counter-based, deterministic)
+    spec = report["speculative"]
+    off = spec["engines"]["off"]
+    ngram = spec["engines"]["ngram"]
+    draft = spec["engines"]["draft"]
+    assert off["spec_dispatches"] == 0 and off["draft_tokens_proposed"] == 0
+    for eng in (ngram, draft):
+        assert eng["spec_dispatches"] > 0
+        assert eng["draft_tokens_proposed"] > 0
+        assert eng["tokens_emitted"] == off["tokens_emitted"]
+    assert draft["draft_dispatches"] > 0  # the draft model actually ran
+    assert ngram["draft_tokens_accepted"] > 0
+    assert ngram["dispatches_per_token"] < off["dispatches_per_token"]
+    assert ngram["accepted_per_dispatch"] >= 2.0
+    assert max(spec["dispatch_reduction_vs_off"].values()) > 1.0
     # continuous-batching scenario: staggered arrivals must be admitted
     # mid-flight (rc=0 above already gates byte-identical outputs), with
     # strictly lower mean time-to-first-token than drain-then-refill
@@ -68,3 +87,16 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     assert cont["mean_ttft_ticks"] < drain["mean_ttft_ticks"]
     assert cb["ttft_reduction"] > 1.0
     assert cont["tokens_emitted"] == drain["tokens_emitted"]
+    # the freshly-generated report must satisfy the published schema,
+    # and every scenario block must be gated by this test file
+    assert check_bench.check_report(report) == []
+    assert check_bench.check_test_coverage(open(__file__).read()) == []
+
+
+def test_committed_bench_report_schema():
+    """The checked-in full-run BENCH_serving.json must match the schema
+    too — a bench refactor has to regenerate it, not strand it."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+    report = json.load(open(path))
+    assert check_bench.check_report(report) == []
+    assert not report["smoke"], "committed report must come from a full run"

@@ -566,6 +566,44 @@ def test_prefix_store_ttl_sweep(tmp_path):
     assert ps.sweep(0.0) == 0
 
 
+def test_async_publisher_flush_errors_and_restart(tmp_path):
+    """The background publisher's contract: flush() blocks until every
+    submitted write was attempted; a failing put is counted + dropped
+    without killing the worker; close() is restartable (a later submit
+    spins the worker back up)."""
+    store = ObjectStore(str(tmp_path / "store"))
+    ps = PrefixStore(store, "ns")
+    pub = ps.publisher()
+    page = {"k": np.arange(4, dtype=np.float32).reshape(2, 2)}
+
+    pub.submit("aa" * 32, page)
+    pub.submit("bb" * 32, page)
+    pub.flush()
+    for key in ("aa" * 32, "bb" * 32):
+        got = ps.fetch(key, like=page)
+        assert got is not None and np.array_equal(got["k"], page["k"])
+
+    # a raising put is logged + dropped; the worker thread survives
+    real_publish = ps.publish
+    def boom(key, arrays):
+        raise OSError("store down")
+    ps.publish = boom
+    pub.submit("cc" * 32, page)
+    pub.flush()
+    assert pub.errors == 1 and not ps.exists("cc" * 32)
+    ps.publish = real_publish
+    pub.submit("dd" * 32, page)  # same worker, next write succeeds
+    pub.flush()
+    assert ps.exists("dd" * 32)
+
+    # close() drains and stops the worker but the publisher is reusable
+    pub.close()
+    assert pub._thread is None
+    pub.submit("ee" * 32, page)
+    pub.close()
+    assert ps.exists("ee" * 32)
+
+
 def test_prefix_store_namespace_isolation(tmp_path):
     """Different namespaces (different params identity) must never share
     pages: engine C under another namespace sees a cold store."""
