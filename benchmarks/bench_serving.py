@@ -196,6 +196,162 @@ def staggered_requests(n_requests: int, max_new: int, seed: int = 7):
     return reqs, arrivals
 
 
+def churn_request_bodies(n_requests: int, max_new: int, *, prefix_len: int,
+                         tail_len: int, seed: int = 21):
+    """Queue message bodies for the elastic-churn drill: one shared
+    page-sized system prefix (so survivors can hydrate it from the
+    cross-host store after a revocation) plus short distinct tails."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, 200, size=prefix_len)]
+    return [
+        {"uid": f"c{i}",
+         "prompt": prefix + [int(t) for t in rng.integers(1, 200,
+                                                          size=tail_len)],
+         "max_new_tokens": max_new}
+        for i in range(n_requests)
+    ]
+
+
+# lease robustness counters aggregated over every segment summary a churn
+# run leaves behind (per-worker RESULTS-*.json + drained leases/*.json)
+_CHURN_COUNTERS = (
+    "revocation_notices", "drain_requeued_requests", "requests_resumed",
+    "lease_slices", "lease_resumes",
+    "prefix_store_pages_hydrated", "prefix_store_pages_published",
+)
+
+
+def run_churn_fleet(*, label: str, autoscale: str, max_fleet: int, bodies,
+                    serve_job: dict, arrivals: dict, chaos_seed: int,
+                    workdir: str, tick_seconds: float = 30.0,
+                    max_ticks: int = 600) -> dict:
+    """One simulated serving fleet under an arrival spike and a seeded
+    spot-revocation drill: elastic serving leases stream requests from a
+    shared DurableQueue, the chaos monkey revokes instances mid-spike
+    (the victims drain gracefully and requeue their in-flight work), and
+    survivors/replacements resume it — hydrating the shared prefix's KV
+    page from the object store instead of re-prefilling.  All latency is
+    virtual-clock, so the numbers are deterministic on any host."""
+    from repro.core import (
+        DSConfig, DSRuntime, FleetFile, JobFile, SimRunner, VirtualClock,
+    )
+    from repro.core.chaos import ChaosMonkey
+    from repro.core.queue import DurableQueue
+    from repro.launch.serve import reset_serve_state
+    from repro.serving.types import percentiles
+    import repro.launch.serve  # noqa: F401  (registers distributed-serve)
+    import repro.launch.train  # noqa: F401
+
+    # worker ids repeat across independent simulated runs: stale warm
+    # engines must not let lease state "survive" a simulated fleet swap
+    reset_serve_state()
+    clk = VirtualClock()
+    cfg = DSConfig(
+        app_name=f"Churn{label.capitalize()}",
+        payload="distributed-serve",
+        cluster_machines=1,
+        tasks_per_machine=1,
+        machine_type=["sim.large"],
+        machine_price=1.0,
+        # one task fills a sim.large (8 vcpus): ECS bin-packs by
+        # resources, so a half-size task would double up on the first
+        # machine and leave scaled-up instances idle (and revocations
+        # would hit workerless machines)
+        cpu_shares=8192,
+        memory_mb=16384,
+        sqs_message_visibility=240.0,
+        check_if_done=False,
+        idle_alarm_seconds=100_000.0,  # chaos drives churn, not idle alarms
+        monitor_poll_seconds=tick_seconds,
+        autoscale=autoscale,
+        min_workers=1,
+        max_workers=max_fleet,
+        autoscale_queue_per_worker=3,
+        autoscale_target_p99_ttft=6.0,
+        autoscale_up_cooldown_seconds=tick_seconds,
+        autoscale_down_cooldown_seconds=600.0,
+        autoscale_max_step=2,
+    )
+    rt = DSRuntime(cfg, store_root=os.path.join(workdir, f"store_{label}"),
+                   clock=clk)
+    rt.setup()
+    rq_path = os.path.join(workdir, f"requests_{label}.sqlite")
+    rq = DurableQueue(
+        rq_path,
+        default_visibility=float(serve_job.get("request_visibility", 240.0)),
+        max_receive_count=int(serve_job.get("request_max_receive_count", 6)),
+        clock=clk,
+    )
+    job = dict(serve_job, request_queue=rq_path,
+               expected_requests=len(bodies), output_prefix="serve/churn")
+    # interchangeable lease permits, one per potential worker: any permit
+    # a worker claims resumes that worker's own warm engine
+    rt.submit_job(JobFile(shared=job, groups=[{} for _ in range(max_fleet)]))
+    rt.start_cluster(FleetFile(startup_seconds=tick_seconds, market_seed=7))
+    # first notice lands mid-spike (arrivals peak at tick 4); an event
+    # whose victim pool is empty (everything already revoked) stays
+    # pending and fires once a replacement is running, so the static
+    # single-machine fleet eats both revocations back to back
+    chaos = ChaosMonkey.revocation_drill(
+        rt.fleet, clk, seed=chaos_seed, n_revocations=2,
+        start=3 * tick_seconds, spacing=3 * tick_seconds,
+        notice_seconds=2 * tick_seconds, store=rt.store, logs=rt.logs,
+    )
+    submitted_at = {}
+
+    def on_tick(t):
+        for body in arrivals.get(t, ()):
+            submitted_at[body["uid"]] = clk.now()
+            rq.send(dict(body, submitted_at=clk.now()))
+
+    runner = SimRunner(rt, tick_seconds=tick_seconds, chaos=chaos,
+                       on_tick=on_tick)
+    summary = runner.run(max_ticks=max_ticks)
+    req_prefix = "serve/churn/requests/"
+    records = {
+        info.key[len(req_prefix):-len(".json")]: rt.store.get_json(info.key)
+        for info in rt.store.list(req_prefix)
+        if info.key.endswith(".json")
+    }
+    counters = {k: 0 for k in _CHURN_COUNTERS}
+    for seg_prefix in ("serve/churn/RESULTS-", "serve/churn/leases/"):
+        for info in rt.store.list(seg_prefix):
+            seg = rt.store.get_json(info.key)
+            for k in counters:
+                # noop permit summaries carry no counter block
+                counters[k] += int(seg.get(k, 0))
+    # client-observed latency: submit (queue send) -> completion record,
+    # in virtual seconds.  p99 over the request population is the
+    # fleet-level SLO the autoscaler is being graded on.
+    turnarounds = [rec["done_at"] - submitted_at[uid]
+                   for uid, rec in records.items() if uid in submitted_at]
+    sim_s = summary.wall_time
+    tokens = sum(len(r["completion"]) for r in records.values())
+    result = {
+        "sim_seconds": round(sim_s, 1),
+        "tokens_per_sim_s": round(tokens / max(sim_s, 1e-9), 4),
+        "p99_ttft_s": percentiles(turnarounds)["p99"],
+        "lost_requests": len(bodies) - len(records),
+        "revocations_injected": chaos.counters["revocations"],
+        "requests_requeued": counters["drain_requeued_requests"],
+        "requests_resumed": counters["requests_resumed"],
+        "revocation_notices": counters["revocation_notices"],
+        "lease_slices": counters["lease_slices"],
+        "lease_resumes": counters["lease_resumes"],
+        "prefix_store_pages_hydrated": counters["prefix_store_pages_hydrated"],
+        "prefix_store_pages_published": counters["prefix_store_pages_published"],
+        "workers_peak": max(
+            (r.running_instances for r in runner.monitor.history), default=0),
+        "ticks": summary.ticks,
+        "outputs": {uid: r["completion"] for uid, r in records.items()},
+    }
+    rq.close()
+    reset_serve_state()
+    return result
+
+
 _COUNTERS = (
     "decode_dispatches", "prefill_dispatches", "dispatches",
     "tokens_emitted", "prompt_tokens_ingested",
@@ -609,6 +765,85 @@ def main(argv=None) -> int:
             f"({r['ticks']} ticks total)"
         )
 
+    # ------------------------------------------------ elastic churn drill
+    # static fleet vs autoscaled fleet, both under the same arrival spike
+    # and the same seeded revocation drill: robustness (zero lost
+    # requests, byte-identical output) is the hard gate, the autoscaler's
+    # p99 win and the survivors' prefix-store hydration are the payoff
+    churn_results = {}
+    churn_scenario = {}
+    if model.supports_paged_cache:
+        import tempfile
+
+        # the decode tail is what keeps requests in flight while the
+        # drill fires: one request costs ~(1 + max_new_tokens) engine
+        # steps and a lease runs stream_slice_ticks steps per simulator
+        # tick, so short completions would drain the spike before the
+        # second revocation has a victim with anything to lose
+        ch_requests = 10 if args.smoke else 20
+        ch_new = 12 if args.smoke else 16
+        ch_seed = 1234
+        ch_bodies = churn_request_bodies(ch_requests, ch_new,
+                                         prefix_len=page_size, tail_len=3)
+        ch_job = {
+            "arch": args.arch, "arch_overrides": "reduced",
+            "max_new_tokens": ch_new, "max_len": 64, "max_batch": 2,
+            "prefill_chunk": 8, "cache_mode": "paged",
+            "page_size": page_size, "prefix_cache": True,
+            "prefix_store": True,
+            "stream_slice_ticks": 4, "stream_idle_polls": 60,
+            "request_visibility": 240.0, "request_max_receive_count": 6,
+        }
+        # a trickle, then most of the load at once mid-run (ticks are
+        # SimRunner ticks, 30 virtual seconds each)
+        ch_arrivals = {2: ch_bodies[:3], 4: ch_bodies[3:]}
+        churn_scenario = {
+            "n_requests": ch_requests, "max_new_tokens": ch_new,
+            "max_batch": 2, "prefill_chunk": 8, "page_size": page_size,
+            "prefix_len": page_size, "stream_slice_ticks": 4,
+            "chaos_seed": ch_seed, "n_revocations": 2,
+            "notice_seconds": 60.0, "tick_seconds": 30.0,
+            "min_workers": 1, "max_workers": 3,
+            "arrivals_by_tick": {str(k): len(v)
+                                 for k, v in ch_arrivals.items()},
+        }
+        # undisturbed oracle: the same requests through one direct engine
+        # (greedy sampling streams are submit-order keyed, so output is
+        # scheduling- and fleet-invariant)
+        from repro.serving.engine import Request, ServeEngine
+
+        oracle_eng = ServeEngine(model, params, max_batch=2, max_len=64,
+                                 prefill_chunk=8)
+        oracle_eng.submit([
+            Request(uid=b["uid"], prompt=list(b["prompt"]),
+                    max_new_tokens=ch_new)
+            for b in ch_bodies
+        ])
+        oracle_eng.run_to_completion()
+        oracle = {r.uid: list(r.output) for r in oracle_eng.finished}
+        with tempfile.TemporaryDirectory() as ch_dir:
+            for name, auto, fleet_cap in (("static", "off", 1),
+                                          ("autoscaled", "slo", 3)):
+                r = run_churn_fleet(
+                    label=name, autoscale=auto, max_fleet=fleet_cap,
+                    bodies=ch_bodies, serve_job=ch_job,
+                    arrivals=ch_arrivals, chaos_seed=ch_seed,
+                    workdir=ch_dir,
+                )
+                r["byte_identical"] = r["outputs"] == oracle
+                churn_results[name] = r
+                print(
+                    f"[bench_serving] churn/{name:10s} "
+                    f"p99_turnaround={r['p99_ttft_s']:6.0f}s "
+                    f"lost={r['lost_requests']} "
+                    f"revocations={r['revocations_injected']} "
+                    f"requeued={r['requests_requeued']} "
+                    f"resumed={r['requests_resumed']} "
+                    f"hydrated={r['prefix_store_pages_hydrated']} "
+                    f"workers_peak={r['workers_peak']} "
+                    f"identical={r['byte_identical']}"
+                )
+
     report = {
         "arch": args.arch,
         "smoke": args.smoke,
@@ -677,6 +912,15 @@ def main(argv=None) -> int:
                 for n in ("ngram", "draft")
             },
         }
+    if churn_results:
+        report["elastic_churn"] = {
+            "scenario": churn_scenario,
+            "engines": churn_results,
+            "p99_ttft_reduction": round(
+                churn_results["static"]["p99_ttft_s"]
+                / max(churn_results["autoscaled"]["p99_ttft_s"], 1e-9), 2
+            ),
+        }
     if midpage_results:
         mp_page = midpage_results["paged_prefix_page"]
         mp_tok = midpage_results["paged_prefix_token"]
@@ -696,7 +940,8 @@ def main(argv=None) -> int:
     for prefix, group in (("", results), ("shared/", shared_results),
                           ("midpage/", midpage_results),
                           ("spec/", spec_results),
-                          ("staggered/", staggered_results)):
+                          ("staggered/", staggered_results),
+                          ("churn/", churn_results)):
         for name, r in group.items():
             outputs[prefix + name] = r.pop("outputs")
     with open(args.out, "w") as f:
@@ -718,6 +963,9 @@ def main(argv=None) -> int:
           + (f", speculative dispatch reduction "
              f"{max(report['speculative']['dispatch_reduction_vs_off'].values())}x"
              if spec_results else "")
+          + (f", churn p99 reduction "
+             f"{report['elastic_churn']['p99_ttft_reduction']}x"
+             if churn_results else "")
           + ")")
 
     # the whole point of the fused engine: strictly fewer dispatches/token
@@ -840,6 +1088,33 @@ def main(argv=None) -> int:
                 >= staggered_results["drain"]["mean_ttft_ticks"]):
             print("[bench_serving] REGRESSION: continuous batching did not "
                   "beat drain-then-refill mean TTFT")
+            return 1
+    if churn_results:
+        for name in ("static", "autoscaled"):
+            r = churn_results[name]
+            # the robustness tentpole's hard gates: a revocation drill
+            # must lose NOTHING and change NOTHING
+            if r["lost_requests"] != 0 or not r["byte_identical"]:
+                print(f"[bench_serving] REGRESSION: churn/{name} lost "
+                      f"{r['lost_requests']} request(s) or diverged from "
+                      "the undisturbed run")
+                return 1
+            if r["revocations_injected"] < 2:
+                print(f"[bench_serving] REGRESSION: churn/{name} injected "
+                      f"only {r['revocations_injected']} revocation(s)")
+                return 1
+        # survivors/replacements must warm up from the cross-host prefix
+        # store, not re-prefill (that is what makes churn cheap)
+        if churn_results["autoscaled"]["prefix_store_pages_hydrated"] <= 0:
+            print("[bench_serving] REGRESSION: no prefix-store hydration "
+                  "on post-revocation reruns")
+            return 1
+        # and the autoscaler's reason to exist: the spike's p99
+        # turnaround must beat the static fleet's
+        if (churn_results["autoscaled"]["p99_ttft_s"]
+                >= churn_results["static"]["p99_ttft_s"]):
+            print("[bench_serving] REGRESSION: autoscaled fleet did not "
+                  "beat the static fleet's p99 turnaround under churn")
             return 1
     return 0
 

@@ -44,6 +44,13 @@ ENGINE_KEYS = (
 # latency rather than the dispatch-counter block
 STAGGERED_KEYS = ("refill_policy", "wall_s", "ticks", "dispatches",
                   "tokens_emitted", "timing", "mean_ttft_ticks")
+# the churn drill reports fleet-level robustness facts (virtual-time
+# throughput/latency, chaos accounting, recovery counters) rather than
+# single-engine dispatch counters
+CHURN_KEYS = ("sim_seconds", "tokens_per_sim_s", "p99_ttft_s",
+              "lost_requests", "revocations_injected", "requests_requeued",
+              "requests_resumed", "prefix_store_pages_hydrated",
+              "byte_identical", "workers_peak")
 
 # scenario block -> (path to its engines dict, required engine names,
 # per-engine required keys, block-level derived metrics)
@@ -64,6 +71,9 @@ SCENARIOS = {
     "continuous_batching": (("continuous_batching", "engines"),
                             ("continuous", "drain"), STAGGERED_KEYS,
                             ("ttft_reduction",)),
+    "elastic_churn": (("elastic_churn", "engines"),
+                      ("static", "autoscaled"), CHURN_KEYS,
+                      ("p99_ttft_reduction",)),
 }
 
 

@@ -1,0 +1,183 @@
+"""Autoscaler — sizes the serving fleet to its load, without flapping.
+
+The paper sizes the fleet once (``CLUSTER_MACHINES``) and leaves it; the
+monitor only ever scales *down* (idle alarms, cheapest mode, teardown).
+This control loop closes the other half: the monitor ticks it once per
+poll, it reads demand from two deterministic signals, and it drives
+``SpotFleet.modify_target`` + ``ECSCluster.update_desired_count``.
+
+Signals
+-------
+- **queue depth**: serve leases report their shared request queue's
+  ``visible + in_flight`` in heartbeat progress payloads (collected on
+  the runtime's :class:`ProgressBoard`).  Every lease reports the *same*
+  queue, so the policy takes the max over fresh reports — summing would
+  multiply demand by the worker count.  With no fresh report (fleet
+  still starting), the *job* queue's counts are the fallback.
+- **SLO** (``autoscale=slo``): leases also report p99 TTFT (engine
+  ticks) from their scheduler timing window; when the worst fresh p99
+  exceeds ``autoscale_target_p99_ttft`` the fleet scales up regardless
+  of queue depth.
+
+Anti-flap machinery, all explicit knobs on :class:`~.config.DSConfig`:
+hysteresis (inside the band ``(target/2, target]`` the fleet holds
+rather than shrinking), separate scale-up / scale-down cooldowns (a
+scale-down additionally waits out the *up* cooldown, so a spike
+followed by quiet does not thrash), and a per-decision step bound
+(``autoscale_max_step``).  Targets always clamp to
+``[min_workers, max_workers]``.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .clock import Clock
+from .cluster import ECSCluster
+from .config import DSConfig
+from .fleet import SpotFleet
+from .logs import LogGroup
+from .queue import DurableQueue
+
+
+class ProgressBoard:
+    """Latest heartbeat progress payload per worker, with timestamps.
+
+    Written from worker heartbeat paths (possibly many threads), read by
+    the autoscaler on the monitor thread — hence the lock.  Stale
+    entries (dead workers) age out via the ``fresh()`` window instead of
+    requiring explicit deregistration.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._latest: Dict[str, Tuple[float, dict]] = {}
+
+    def put(self, worker_id: str, payload: dict, now: float) -> None:
+        with self._lock:
+            self._latest[worker_id] = (now, dict(payload))
+
+    def fresh(self, now: float, max_age: float) -> List[dict]:
+        with self._lock:
+            return [
+                payload
+                for t, payload in self._latest.values()
+                if now - t <= max_age
+            ]
+
+
+@dataclass
+class ScaleDecision:
+    time: float
+    current: int
+    desired: int
+    applied: bool
+    reason: str
+
+
+class Autoscaler:
+    def __init__(
+        self,
+        cfg: DSConfig,
+        queue: DurableQueue,
+        fleet: SpotFleet,
+        cluster: ECSCluster,
+        *,
+        clock: Clock,
+        logs: Optional[LogGroup] = None,
+        board: Optional[ProgressBoard] = None,
+    ):
+        self.cfg = cfg
+        self.queue = queue
+        self.fleet = fleet
+        self.cluster = cluster
+        self.clock = clock
+        self.logs = logs
+        self.board = board
+        self._last_up = float("-inf")
+        self._last_down = float("-inf")
+        self.decisions: List[ScaleDecision] = []
+
+    # ------------------------------------------------------------------ tick
+    def tick(self) -> Optional[ScaleDecision]:
+        cfg = self.cfg
+        if cfg.autoscale == "off":
+            return None
+        now = self.clock.now()
+        current = self.fleet.target_capacity
+        max_age = max(2 * cfg.monitor_poll_seconds, 120.0)
+        reports = [
+            p
+            for p in (self.board.fresh(now, max_age) if self.board else [])
+            if p.get("kind") == "serve"
+        ]
+        if reports:
+            backlog = max(int(p.get("backlog", 0)) for p in reports)
+            signal = "reported"
+        else:
+            c = self.queue.counts()
+            backlog = c["visible"] + c["in_flight"]
+            signal = "job-queue"
+        desired = math.ceil(backlog / max(1, cfg.autoscale_queue_per_worker))
+        reason = f"{signal} backlog={backlog}"
+
+        if cfg.autoscale == "slo" and reports:
+            p99 = max(float(p.get("p99_ttft", 0.0)) for p in reports)
+            target = cfg.autoscale_target_p99_ttft
+            if p99 > target:
+                # SLO breach: step up as fast as the bound allows, even
+                # if the queue-depth policy thinks capacity suffices
+                desired = max(desired, current + cfg.autoscale_max_step)
+                reason = f"slo breach p99_ttft={p99:.1f}>{target:.1f}"
+            elif p99 > target / 2 and desired < current:
+                # hysteresis band: latency is within SLO but not by a
+                # 2x margin — hold rather than shrink into a breach
+                desired = current
+                reason = f"slo hold p99_ttft={p99:.1f} in ({target/2:.1f},{target:.1f}]"
+
+        desired = max(cfg.min_workers, min(cfg.max_workers, desired))
+        # per-decision step bound
+        desired = max(current - cfg.autoscale_max_step,
+                      min(current + cfg.autoscale_max_step, desired))
+
+        applied = False
+        if desired > current:
+            if now - self._last_up >= cfg.autoscale_up_cooldown_seconds:
+                self._apply(desired)
+                self._last_up = now
+                applied = True
+            else:
+                reason += " (up-cooldown)"
+        elif desired < current:
+            # a scale-down also waits out the up-cooldown so a spike
+            # followed by one quiet poll cannot flap the fleet
+            if now - max(self._last_up, self._last_down) >= (
+                cfg.autoscale_down_cooldown_seconds
+            ):
+                self._apply(desired)
+                self._last_down = now
+                applied = True
+            else:
+                reason += " (down-cooldown)"
+        decision = ScaleDecision(
+            time=now, current=current, desired=desired,
+            applied=applied, reason=reason,
+        )
+        self.decisions.append(decision)
+        if applied and self.logs is not None:
+            self.logs.put(
+                "autoscaler",
+                f"scale {current} -> {desired} ({reason})",
+            )
+        return decision
+
+    def _apply(self, desired: int) -> None:
+        self.fleet.modify_target(desired)
+        svc = f"{self.cfg.app_name}Service"
+        if svc in self.cluster.services:
+            self.cluster.update_desired_count(
+                svc, desired * self.cfg.tasks_per_machine
+            )

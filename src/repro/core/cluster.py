@@ -87,8 +87,15 @@ class ECSCluster:
         self.services[service_name].desired_count = int(count)
 
     def deregister_service(self, service_name: str) -> None:
-        self.services.pop(service_name, None)
-        for tid in [t for t, task in self.tasks.items() if task.definition.family.startswith(service_name)]:
+        # match tasks by the service's task definition: the definition
+        # family is "<app>Task" while the service is "<app>Service", so
+        # the old family.startswith(service_name) check never fired and
+        # task records leaked past teardown
+        svc = self.services.pop(service_name, None)
+        if svc is None:
+            return
+        for tid in [t for t, task in self.tasks.items()
+                    if task.definition == svc.task_definition]:
             self.tasks.pop(tid, None)
 
     # -- placement -------------------------------------------------------------
@@ -107,7 +114,10 @@ class ECSCluster:
         current = [
             t
             for t, task in live.items()
-            if task.definition is svc.task_definition
+            # equality, not identity: a re-registered service (same config,
+            # new TaskDefinition object) must still count its live tasks
+            # or placement doubles up
+            if task.definition == svc.task_definition
             and fleet.instances.get(task.instance_id) is not None
             and fleet.instances[task.instance_id].state == InstanceState.RUNNING
         ]

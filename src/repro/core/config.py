@@ -88,6 +88,22 @@ class DSConfig:
     # output is byte-identical either way, only tokens/dispatch changes
     speculative: str = "off"
     spec_k: int = 4
+    # -- autoscaling ---------------------------------------------------------
+    # "off" (static fleet, the paper's behaviour), "queue" (size to the
+    # reported request-queue backlog) or "slo" (queue policy plus scale-up
+    # on p99 TTFT breaches).  See core/autoscaler.py for the policy and
+    # docs/serving.md for operator guidance.  min/max_workers bound the
+    # fleet target; target p99 is in engine ticks (the unit serve leases
+    # report); cooldowns are (virtual) seconds; max_step bounds how far
+    # one decision may move the target.
+    autoscale: str = "off"
+    min_workers: int = 1
+    max_workers: int = 8
+    autoscale_queue_per_worker: int = 4
+    autoscale_target_p99_ttft: float = 0.0
+    autoscale_up_cooldown_seconds: float = 60.0
+    autoscale_down_cooldown_seconds: float = 600.0
+    autoscale_max_step: int = 2
 
     # -- idempotent restart (CHECK_IF_DONE) ----------------------------------
     check_if_done: bool = True  # CHECK_IF_DONE_BOOL
@@ -132,6 +148,25 @@ class DSConfig:
             )
         if self.spec_k < 1:
             raise ValueError("spec_k must be >= 1")
+        if self.autoscale not in ("off", "queue", "slo"):
+            raise ValueError(
+                f"autoscale must be off|queue|slo, got {self.autoscale!r}"
+            )
+        if self.min_workers < 1:
+            raise ValueError("min_workers must be >= 1")
+        if self.max_workers < self.min_workers:
+            raise ValueError("max_workers must be >= min_workers")
+        if self.autoscale_queue_per_worker < 1:
+            raise ValueError("autoscale_queue_per_worker must be >= 1")
+        if self.autoscale_max_step < 1:
+            raise ValueError("autoscale_max_step must be >= 1")
+        if (self.autoscale_up_cooldown_seconds < 0
+                or self.autoscale_down_cooldown_seconds < 0):
+            raise ValueError("autoscale cooldowns must be >= 0")
+        if self.autoscale == "slo" and self.autoscale_target_p99_ttft <= 0:
+            raise ValueError(
+                "autoscale='slo' needs autoscale_target_p99_ttft > 0"
+            )
 
 
 @dataclass

@@ -48,6 +48,10 @@ class Instance:
     # liveness: last heartbeat from any task on this instance
     last_heartbeat: float = 0.0
     name: str = ""  # the Docker names its instance when placed (paper step 3.2)
+    # spot-revocation notice: when set, this instance will be terminated
+    # at this time (the EC2 two-minute warning).  Workers observe it via
+    # WorkerContext.revoked() and drain gracefully before the deadline.
+    revoke_at: Optional[float] = None
 
 
 class SpotMarket:
@@ -139,6 +143,12 @@ class SpotFleet:
         # 1. preemptions & price-outs
         for inst in list(self.instances.values()):
             if inst.state == InstanceState.TERMINATED:
+                continue
+            # revocation-notice deadline (chaos-injected or market): the
+            # warning window has elapsed, the instance is taken back
+            if inst.revoke_at is not None and now >= inst.revoke_at:
+                self._terminate(inst, "spot-revocation")
+                terminated.append(inst)
                 continue
             if self._preempt_at.get(inst.id, float("inf")) <= now:
                 self._terminate(inst, "spot-preemption")

@@ -44,6 +44,10 @@ class MonitorReport:
     idle_terminations: List[str] = field(default_factory=list)
     downscaled: bool = False
     finished: bool = False
+    # chaos faults fired this poll ("kind:target") and the autoscaler's
+    # applied target change (None = held / autoscaling off)
+    chaos_events: List[str] = field(default_factory=list)
+    autoscaled_to: Optional[int] = None
 
 
 class Monitor:
@@ -59,6 +63,8 @@ class Monitor:
         *,
         clock: Optional[Clock] = None,
         cheapest: bool = False,
+        autoscaler=None,
+        chaos=None,
     ):
         self.cfg = cfg
         self.queue = queue
@@ -69,6 +75,8 @@ class Monitor:
         self.store = store
         self.clock = clock or WallClock()
         self.cheapest = cheapest
+        self.autoscaler = autoscaler
+        self.chaos = chaos
         self.started_at = self.clock.now()
         self.finished = False
         self._cheapest_applied = False
@@ -80,6 +88,15 @@ class Monitor:
     def tick(self) -> MonitorReport:
         """One monitor poll (the paper's once-per-minute check)."""
         now = self.clock.now()
+        # fire scheduled chaos first: a fault injected this poll must be
+        # visible to the idle alarms / autoscaler evaluated below, same
+        # as one that happened between polls
+        if self.chaos is not None:
+            report_chaos = [
+                f"{r.kind}:{r.target}" for r in self.chaos.tick()
+            ]
+        else:
+            report_chaos = []
         counts = self.queue.counts()
         report = MonitorReport(
             time=now,
@@ -88,6 +105,7 @@ class Monitor:
             dead=counts["dead"],
             running_instances=len(self.fleet.running()),
             pending_instances=len(self.fleet.pending()),
+            chaos_events=report_chaos,
         )
 
         # -- idle alarms -----------------------------------------------------
@@ -124,6 +142,12 @@ class Monitor:
             self.fleet.replace_on_terminate = False
             self._cheapest_applied = True
             self.logs.put("monitor", "cheapest mode: fleet target downscaled to 1")
+
+        # -- autoscaling ---------------------------------------------------------
+        if self.autoscaler is not None and not self.finished:
+            decision = self.autoscaler.tick()
+            if decision is not None and decision.applied:
+                report.autoscaled_to = decision.desired
 
         # -- teardown when drained --------------------------------------------------
         if counts["visible"] == 0 and counts["in_flight"] == 0 and not self.finished:

@@ -138,9 +138,14 @@ class DurableQueue:
                 # (vt <= 0) sit at the front of the ordering and must not
                 # mask unseen candidates behind the LIMIT
                 want = max_messages - len(claimed) + len(seen)
+                # tie-break equal enqueued_at by rowid (insertion order),
+                # not id: ids are uuid4, so an id tie-break shuffles the
+                # claim order of same-instant messages from run to run —
+                # rowid keeps claim order FIFO and replay-deterministic
+                # (release() is an UPDATE, so a message keeps its rowid)
                 rows = self._conn.execute(
                     "SELECT id, body, enqueued_at, receive_count FROM messages "
-                    "WHERE visible_at <= ? ORDER BY enqueued_at, id LIMIT ?",
+                    "WHERE visible_at <= ? ORDER BY enqueued_at, rowid LIMIT ?",
                     (now, want),
                 ).fetchall()
                 rows = [r for r in rows if r[0] not in seen][: max_messages - len(claimed)]

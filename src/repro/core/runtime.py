@@ -23,6 +23,7 @@ import threading
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from .autoscaler import Autoscaler, ProgressBoard
 from .clock import Clock, VirtualClock, WallClock
 from .cluster import ECSCluster, Service, TaskDefinition
 from .config import DSConfig, FleetFile
@@ -69,6 +70,9 @@ class DSRuntime:
         self.fleet: Optional[SpotFleet] = None
         self.task_definition: Optional[TaskDefinition] = None
         self.monitor: Optional[Monitor] = None
+        # latest heartbeat progress payload per worker (autoscaler input)
+        self.progress_board = ProgressBoard()
+        self.autoscaler: Optional[Autoscaler] = None
         self._submitted = 0
 
     # ------------------------------------------------------------ step 1: setup
@@ -117,9 +121,19 @@ class DSRuntime:
         return request_id
 
     # ---------------------------------------------------------- step 4: monitor
-    def make_monitor(self, cheapest: bool = False) -> Monitor:
+    def make_monitor(self, cheapest: bool = False, chaos=None) -> Monitor:
         if self.queue is None or self.fleet is None:
             raise RuntimeError("setup() and start_cluster() must run first")
+        if self.cfg.autoscale != "off":
+            self.autoscaler = Autoscaler(
+                self.cfg,
+                self.queue,
+                self.fleet,
+                self.cluster,
+                clock=self.clock,
+                logs=self.logs,
+                board=self.progress_board,
+            )
         self.monitor = Monitor(
             self.cfg,
             self.queue,
@@ -130,6 +144,8 @@ class DSRuntime:
             self.store,
             clock=self.clock,
             cheapest=cheapest,
+            autoscaler=self.autoscaler,
+            chaos=chaos,
         )
         return self.monitor
 
@@ -150,12 +166,21 @@ class SimRunner:
         tick_seconds: float = 60.0,
         cheapest: bool = False,
         prefetch: int = 1,
+        chaos=None,
+        on_tick=None,
     ):
         if not isinstance(rt.clock, VirtualClock):
             raise TypeError("SimRunner requires a VirtualClock runtime")
         self.rt = rt
         self.tick_seconds = tick_seconds
-        self.monitor = rt.make_monitor(cheapest=cheapest)
+        # chaos: a ChaosMonkey whose time-triggered faults fire from the
+        # monitor poll and whose beat-triggered faults fire from the
+        # heartbeat path (mid-payload).  on_tick(tick_number): a hook
+        # called at the top of every tick — benchmarks inject request
+        # arrivals through it without subclassing the runner.
+        self.chaos = chaos
+        self.on_tick = on_tick
+        self.monitor = rt.make_monitor(cheapest=cheapest, chaos=chaos)
         self._workers: Dict[str, Worker] = {}
         self.preemptions = 0
         # prefetch > 1: workers claim job batches in ONE queue transaction
@@ -174,10 +199,25 @@ class SimRunner:
                 return inst.state.value == "terminated"
 
             def on_heartbeat(inst=inst):
-                inst.last_heartbeat = self.rt.clock.now()
+                # a delay_heartbeat fault suppresses the liveness record
+                # (the idle alarm then sees a silent host); beat-triggered
+                # faults fire here so a kill can land mid-slice
+                ch = self.chaos
+                if ch is None or ch.allow_heartbeat(inst):
+                    inst.last_heartbeat = self.rt.clock.now()
+                if ch is not None:
+                    ch.on_beat(inst)
+
+            def is_revoked(inst=inst):
+                return inst.revoke_at is not None
+
+            worker_id = f"{instance_id}/{task_id}"
+
+            def on_progress(payload, wid=worker_id):
+                self.rt.progress_board.put(wid, payload, self.rt.clock.now())
 
             self._workers[task_id] = Worker(
-                worker_id=f"{instance_id}/{task_id}",
+                worker_id=worker_id,
                 queue=self.rt.queue,
                 store=self.rt.store,
                 logs=self.rt.logs,
@@ -187,6 +227,8 @@ class SimRunner:
                 visibility=self.rt.cfg.sqs_message_visibility,
                 is_terminated=is_terminated,
                 on_heartbeat=on_heartbeat,
+                is_revoked=is_revoked,
+                on_progress=on_progress,
                 prefetch=self.prefetch,
             )
         return self._workers[task_id]
@@ -198,9 +240,15 @@ class SimRunner:
         idle_terms = 0
         while ticks < max_ticks:
             ticks += 1
+            if self.on_tick is not None:
+                self.on_tick(ticks)
             terminated = rt.fleet.tick()
             self.preemptions += sum(
-                1 for i in terminated if i.terminate_reason in ("spot-preemption", "price-above-bid")
+                1 for i in terminated
+                if i.terminate_reason in (
+                    "spot-preemption", "price-above-bid",
+                    "spot-revocation", "chaos-kill",
+                )
             )
             rt.cluster.reap_dead_tasks(rt.fleet)
             placed = rt.cluster.place(f"{rt.cfg.app_name}Service", rt.fleet, rt.clock.now())
@@ -213,7 +261,10 @@ class SimRunner:
                 worker = self._worker_for_task(tid, task.instance_id)
                 for _ in range(rt.task_definition.docker_cores):
                     outcome = worker.process_one()
-                    if outcome in (None, "preempted"):
+                    # "yielded" ends the tick for this worker too: a lease
+                    # slice is a full tick's budget — re-claiming it in the
+                    # same tick would let one worker starve the others
+                    if outcome in (None, "preempted", "yielded"):
                         break
             report = self.monitor.tick()
             idle_terms += len(report.idle_terminations)
@@ -261,8 +312,16 @@ class ThreadRunner:
         def on_heartbeat(inst=inst):
             inst.last_heartbeat = rt.clock.now()
 
+        def is_revoked(inst=inst):
+            return inst.revoke_at is not None
+
+        worker_id = f"{inst.id}/{tid}"
+
+        def on_progress(payload, wid=worker_id):
+            rt.progress_board.put(wid, payload, rt.clock.now())
+
         worker = Worker(
-            worker_id=f"{inst.id}/{tid}",
+            worker_id=worker_id,
             queue=rt.queue,
             store=rt.store,
             logs=rt.logs,
@@ -272,6 +331,8 @@ class ThreadRunner:
             visibility=rt.cfg.sqs_message_visibility,
             is_terminated=is_terminated,
             on_heartbeat=on_heartbeat,
+            is_revoked=is_revoked,
+            on_progress=on_progress,
             prefetch=self.prefetch,
         )
         self.workers.append(worker)

@@ -20,6 +20,9 @@ analogue): signature ``payload(job: dict, ctx: WorkerContext) -> dict``.
 
 from __future__ import annotations
 
+import hashlib
+import json
+import random
 import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
@@ -44,6 +47,46 @@ class NotReady(Exception):
     def __init__(self, msg: str, retry_in: float = 10.0):
         super().__init__(msg)
         self.retry_in = retry_in
+
+
+class LeaseYield(Exception):
+    """Raised by a long-lived payload (a serving lease) that has spent
+    its per-claim slice budget: the message is *released* (retry budget
+    refunded) so the same or another worker resumes it, keeping every
+    worker's per-tick work bounded and letting the fleet re-balance
+    leases under churn."""
+
+    def __init__(self, msg: str, retry_in: float = 0.0):
+        super().__init__(msg)
+        self.retry_in = retry_in
+
+
+def backoff_delay(
+    base: float, attempt: int, *, cap: float, key: str, jitter: float = 0.5
+) -> float:
+    """Capped exponential backoff with deterministic jitter.
+
+    ``min(cap, base * 2**(attempt-1))``, scaled down by up to ``jitter``
+    fraction drawn from ``random.Random(f"{key}#{attempt}")`` — the same
+    (key, attempt) pair always yields the same delay (schedules replay
+    exactly), while distinct keys de-synchronize a thundering herd of
+    requeued jobs that would otherwise retry in lockstep."""
+    a = max(1, int(attempt))
+    delay = min(float(cap), float(base) * (2.0 ** (a - 1)))
+    if jitter and delay > 0:
+        delay *= 1.0 - jitter * random.Random(f"{key}#{a}").random()
+    return delay
+
+
+def _stable_key(msg: Message) -> str:
+    """A run-to-run stable jitter key for a message: its *content* hash.
+    Message ids are uuid4 (fresh every run), so keying jitter on them
+    would make retry schedules unreproducible."""
+    try:
+        blob = json.dumps(msg.body, sort_keys=True)
+    except (TypeError, ValueError):
+        return str(msg.id)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
 
 PAYLOAD_REGISTRY: Dict[str, Callable[[dict, "WorkerContext"], dict]] = {}
@@ -74,6 +117,12 @@ class WorkerContext:
     # liveness wiring
     is_terminated: Callable[[], bool] = lambda: False
     on_heartbeat: Callable[[], None] = lambda: None
+    # spot-revocation notice: True once the hosting instance has been
+    # warned of termination — the payload should drain, not crash
+    is_revoked: Callable[[], bool] = lambda: False
+    # structured progress channel (autoscaler telemetry): payloads push
+    # small dicts, the runner forwards them to the runtime's ProgressBoard
+    on_progress: Callable[[dict], None] = lambda payload: None
     visibility: float = 120.0
     _last_extension: float = field(default=0.0)
 
@@ -90,6 +139,14 @@ class WorkerContext:
                 self._last_extension = now
         if progress:
             self.logs.put(self.worker_id, progress)
+
+    def revoked(self) -> bool:
+        """True once the hosting instance holds a spot-revocation notice."""
+        return self.is_revoked()
+
+    def report_progress(self, payload: dict) -> None:
+        """Publish a structured progress payload (autoscaler telemetry)."""
+        self.on_progress(payload)
 
     def log(self, message: str, **fields) -> None:
         self.logs.put(self.worker_id, message, **fields)
@@ -126,6 +183,8 @@ class Worker:
         empty_polls_before_shutdown: int = 3,
         is_terminated: Callable[[], bool] = lambda: False,
         on_heartbeat: Callable[[], None] = lambda: None,
+        is_revoked: Callable[[], bool] = lambda: False,
+        on_progress: Callable[[dict], None] = lambda payload: None,
         prefetch: int = 1,
     ):
         self.worker_id = worker_id
@@ -139,6 +198,8 @@ class Worker:
         self.empty_polls_before_shutdown = empty_polls_before_shutdown
         self.is_terminated = is_terminated
         self.on_heartbeat = on_heartbeat
+        self.is_revoked = is_revoked
+        self.on_progress = on_progress
         # prefetch > 1: claim a batch of jobs in ONE queue transaction
         # (receive_batch) and drain it locally — high-fanout fleets stop
         # paying a lock + SQL round-trip per job.  Buffered jobs hold
@@ -150,6 +211,11 @@ class Worker:
         self.jobs_failed = 0
         self.jobs_skipped = 0
         self.jobs_not_ready = 0
+        self.jobs_yielded = 0
+        # NotReady retries per message (keyed by id): release() refunds
+        # receive_count, so the message's own counter cannot number the
+        # attempts that exponential backoff needs
+        self._notready_attempts: Dict[str, int] = {}
 
     # -- single-message processing (used by both runners) --------------------
     def process_one(self) -> Optional[str]:
@@ -177,6 +243,8 @@ class Worker:
             queue=self.queue,
             is_terminated=self.is_terminated,
             on_heartbeat=self.on_heartbeat,
+            is_revoked=self.is_revoked,
+            on_progress=self.on_progress,
             visibility=self.visibility,
         )
         ctx._last_extension = self.clock.now()
@@ -197,13 +265,32 @@ class Worker:
             ctx.log("job complete", result=result)
             self.queue.delete(msg)
             self.jobs_done += 1
+            self._notready_attempts.pop(msg.id, None)
             return "done"
         except Preempted:
             ctx.log("preempted mid-job; message will re-surface via visibility timeout")
             return "preempted"
-        except NotReady as e:
-            ctx.log(f"job not ready ({e}); released for retry in {e.retry_in:.0f}s")
+        except LeaseYield as e:
+            # a long-lived lease handing its slice back: release (budget
+            # refunded — yielding is routine, not failure) and let the
+            # fleet re-claim it.  No log line: slices recur every tick.
             self.queue.release(msg, e.retry_in)
+            self.jobs_yielded += 1
+            return "yielded"
+        except NotReady as e:
+            # capped exponential backoff + deterministic content-keyed
+            # jitter: after a revocation requeues a herd of waiting jobs,
+            # their retries spread out instead of hammering in lockstep
+            attempt = self._notready_attempts.get(msg.id, 0) + 1
+            self._notready_attempts[msg.id] = attempt
+            delay = backoff_delay(
+                e.retry_in, attempt, cap=self.visibility, key=_stable_key(msg)
+            )
+            ctx.log(
+                f"job not ready ({e}); released for retry in {delay:.1f}s "
+                f"(attempt {attempt})"
+            )
+            self.queue.release(msg, delay)
             self.jobs_not_ready += 1
             return "not_ready"
         except Exception as e:  # noqa: BLE001 - worker must survive payload bugs
@@ -213,10 +300,16 @@ class Worker:
             )
             # fast-return with backoff: a failed job should not sit out its
             # full (long) processing lease — e.g. a step-span waiting on a
-            # prerequisite checkpoint retries as earlier spans land
-            backoff = min(self.visibility, 5.0 * msg.receive_count)
+            # prerequisite checkpoint retries as earlier spans land.
+            # Exponential in the receive count (the message's own attempt
+            # number survives worker crashes), capped at the visibility,
+            # jittered deterministically by content.
+            backoff = backoff_delay(
+                5.0, msg.receive_count, cap=self.visibility, key=_stable_key(msg)
+            )
             self.queue.change_visibility(msg, backoff)
             self.jobs_failed += 1
+            self._notready_attempts.pop(msg.id, None)
             return "failed"
 
     # -- the full loop (thread runner) ------------------------------------------

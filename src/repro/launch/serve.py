@@ -20,6 +20,24 @@ Two shapes of serving job, sharing one engine construction path:
   them.  At-least-once, exactly like the paper's job queue, but at
   request granularity.
 
+**Elastic leases** (``stream_slice_ticks`` > 0): instead of holding a
+lease to completion, the worker runs at most that many engine ticks per
+claim, then raises :class:`~repro.core.worker.LeaseYield` — the lease
+message is released (budget refunded) and re-claimed next tick, its
+warm engine state cached per worker in between.  Lease messages become
+interchangeable *work permits*: any permit a worker claims resumes that
+worker's own engine, so a fleet can submit ``max_workers`` permits and
+let the autoscaler decide how many workers exist to claim them.  On a
+spot-revocation notice (``WorkerContext.revoked()``) the lease drains
+gracefully: active rows are preempted back, prefix-store publications
+flushed, in-flight request messages made visible immediately (receive
+counts intact, so poison requests still march to the DLQ), the
+segment's counters persisted under ``{out}/leases/``, and the permit
+yielded.  A replacement worker cold-builds — cheaply, because models,
+params and jitted dispatches are memoized process-wide and the
+cross-host prefix store hydrates the KV pages the dead worker already
+published.
+
 Engine knobs accepted from the job dict: ``max_batch``, ``max_len``,
 ``prefill_chunk``, ``dispatch_mode``, ``sample_on_device``,
 ``cache_mode``, ``page_size``, ``total_pages`` (omitted => adaptive),
@@ -47,11 +65,62 @@ from typing import Dict, Optional, Tuple
 import jax
 
 from repro.core.queue import DurableQueue
-from repro.core.worker import WorkerContext, register_payload
+from repro.core.worker import LeaseYield, NotReady, WorkerContext, register_payload
 from repro.launch.train import build_model
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.prefix_store import PrefixStore
 from repro.train.checkpoint import latest_step, restore_checkpoint
+
+# process-wide caches: a serving fleet rebuilds engines constantly
+# (slice resumes after takeover, post-revocation replacements), and
+# model construction / seed-init / jit tracing dominate a cold build.
+# All three are content-keyed, so sharing across engines is sound.
+_MODEL_CACHE: Dict[tuple, object] = {}
+_PARAM_CACHE: Dict[tuple, object] = {}
+# warm lease state, keyed (worker_id, request_queue, output_prefix):
+# survives LeaseYield between claims by the same worker; dropped on
+# completion, drain, or crash
+_LEASE_STATES: Dict[tuple, "_LeaseState"] = {}
+
+
+def reset_serve_state() -> None:
+    """Drop all cached lease state.  Tests and benchmarks call this
+    between independent simulated runs: worker ids repeat across fresh
+    runtimes, and a stale warm engine would otherwise let state
+    "survive" a simulated crash.  Model/param/jit caches are kept —
+    they are content-keyed and runs legitimately share them."""
+    for st in list(_LEASE_STATES.values()):
+        try:
+            st.rq.close()
+        except Exception:
+            pass
+    _LEASE_STATES.clear()
+
+
+def _freeze(value):
+    if isinstance(value, dict):
+        return tuple(sorted(value.items()))
+    return value
+
+
+def _model_key(job: Dict) -> tuple:
+    return (
+        job.get("arch"),
+        _freeze(job.get("arch_overrides")),
+        job.get("moe_strategy", "dense"),
+    )
+
+
+def _cached_model(job: Dict):
+    try:
+        key = _model_key(job)
+        hash(key)
+    except TypeError:  # exotic unhashable overrides: build uncached
+        return build_model(job)
+    model = _MODEL_CACHE.get(key)
+    if model is None:
+        model = _MODEL_CACHE[key] = build_model(job)
+    return model
 
 
 def _build_params(job: Dict, ctx: WorkerContext, model) -> Tuple[object, str]:
@@ -66,11 +135,22 @@ def _build_params(job: Dict, ctx: WorkerContext, model) -> Tuple[object, str]:
         params, _ = restore_checkpoint(ctx.store, run, step, like)
         return params, f"run={run}@{step}"
     seed = int(job.get("init_seed", 0))
-    return model.init(jax.random.PRNGKey(seed)), f"seed={seed}"
+    # seed-init params are pure functions of (arch, seed): cache them so
+    # post-churn engine rebuilds skip re-initialization (checkpoint
+    # params are NOT cached — the run's latest step advances)
+    try:
+        pkey = (_model_key(job), seed)
+        hash(pkey)
+    except TypeError:
+        return model.init(jax.random.PRNGKey(seed)), f"seed={seed}"
+    params = _PARAM_CACHE.get(pkey)
+    if params is None:
+        params = _PARAM_CACHE[pkey] = model.init(jax.random.PRNGKey(seed))
+    return params, f"seed={seed}"
 
 
 def _build_engine(job: Dict, ctx: WorkerContext) -> ServeEngine:
-    model = build_model(job)
+    model = _cached_model(job)
     params, param_id = _build_params(job, ctx, model)
     cache_mode = str(job.get("cache_mode", "dense"))
     if job.get("prefix_store") and cache_mode != "paged":
@@ -111,12 +191,16 @@ def _build_engine(job: Dict, ctx: WorkerContext) -> ServeEngine:
                 "arch": job.get("draft_arch", "ds-paper-100m"),
                 "arch_overrides": job.get("draft_arch_overrides", "reduced"),
             }
-            draft_model = build_model(draft_job)
+            draft_model = _cached_model(draft_job)
             draft_seed = int(job.get("draft_init_seed", 0))
+            dkey = (_model_key(draft_job), draft_seed)
+            draft_params = _PARAM_CACHE.get(dkey)
+            if draft_params is None:
+                draft_params = _PARAM_CACHE[dkey] = draft_model.init(
+                    jax.random.PRNGKey(draft_seed)
+                )
             spec_kwargs["draft_model"] = draft_model
-            spec_kwargs["draft_params"] = draft_model.init(
-                jax.random.PRNGKey(draft_seed)
-            )
+            spec_kwargs["draft_params"] = draft_params
     return ServeEngine(
         model,
         params,
@@ -157,10 +241,12 @@ def _snapshot(engine: ServeEngine) -> Dict:
 
 @register_payload("distributed-serve")
 def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
-    engine = _build_engine(job, ctx)
     if job.get("request_queue"):
-        return _serve_stream(job, ctx, engine)
+        # the streaming path builds (or resumes) its engine lazily: a
+        # lease claimed after the fleet already finished never builds one
+        return _serve_stream(job, ctx)
 
+    engine = _build_engine(job, ctx)
     prompts = job["prompts"]  # list of token-id lists
     engine.submit(
         [_request_from({"prompt": p}, job, f"req{i}") for i, p in enumerate(prompts)]
@@ -175,56 +261,184 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
     return {"n_requests": len(finished), **snap}
 
 
-def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
+class _LeaseState:
+    """Warm per-worker serving state carried across lease slices."""
+
+    __slots__ = (
+        "key", "worker_id", "out", "req_prefix", "results_key", "ctx",
+        "engine", "rq", "inflight", "served", "marks", "acked", "idle",
+        "last_ext",
+    )
+
+    def __init__(self, key, ctx, out, req_prefix, results_key, engine, rq):
+        self.key = key
+        self.worker_id = ctx.worker_id
+        self.ctx = ctx
+        self.out = out
+        self.req_prefix = req_prefix
+        self.results_key = results_key
+        self.engine = engine
+        self.rq = rq
+        self.inflight: Dict[str, object] = {}  # uid -> queue Message
+        self.served = set()
+        self.marks = engine.scheduler.sample_marks()
+        self.acked = 0  # THIS worker's acks (returned as n_requests)
+        self.idle = 0
+        self.last_ext = ctx.clock.now()
+
+
+def _report_progress(ctx: WorkerContext, st: _LeaseState) -> None:
+    """Publish the autoscaler's inputs: shared request-queue backlog
+    (every lease reports the same queue — the policy takes the max, not
+    the sum) and this lease's latency percentiles in engine ticks."""
+    qc = st.rq.counts()
+    timing = st.engine.scheduler.timing(**st.marks)
+    active = len(st.engine.scheduler.pending) + sum(
+        1 for s in st.engine.slots if s.req is not None
+    )
+    ctx.report_progress({
+        "kind": "serve",
+        "backlog": qc["visible"] + qc["in_flight"],
+        "active": active,
+        "p99_ttft": timing["ttft_ticks"]["p99"],
+        "p99_queue_wait": timing["queue_wait_ticks"]["p99"],
+        "served": len(st.served),
+    })
+
+
+def _revocation_drain(ctx: WorkerContext, st: _LeaseState, wid_safe: str) -> None:
+    """Graceful spot-revocation drain, inside the notice window: stop
+    admitting, roll active rows back, flush prefix-store publications
+    (they must outlive this worker — hydration is what makes the
+    replacement cheap), make every in-flight request message visible
+    NOW (receive counts intact: churn must still march poison requests
+    toward the DLQ), and persist this segment's counters — the
+    replacement's summary cannot include them."""
+    engine = st.engine
+    engine.stats.revocation_notices += 1
+    for row, slot in enumerate(engine.slots):
+        if slot.req is not None:
+            engine.scheduler.preempt(row)
+    # durable copies of everything local live in st.inflight; dropping
+    # the local queue loses no requests
+    engine.scheduler.pending.clear()
+    engine.cache_mgr.flush_store()
+    requeued = 0
+    for m in st.inflight.values():
+        if st.rq.change_visibility(m, 0.0):
+            requeued += 1
+    engine.stats.drain_requeued_requests += requeued
+    snap = _snapshot(engine)
+    snap["timing"] = engine.scheduler.timing(**st.marks)
+    snap["n_requests"] = st.acked
+    snap["worker_id"] = st.worker_id
+    ctx.store.put_json(f"{st.out}/leases/{wid_safe}.json", snap)
+    _report_progress(ctx, st)
+    _LEASE_STATES.pop(st.key, None)
+    st.rq.close()
+    ctx.log(
+        f"revocation drain: requeued {requeued} in-flight requests, "
+        f"flushed prefix publications, persisted segment counters"
+    )
+
+
+def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
     """Stream request messages from a DurableQueue through the scheduler.
 
     Loop shape: top up a bounded admission backlog from the queue, run
     one engine tick, ack whatever finished, extend in-flight leases on
     the heartbeat cadence.  Exits when ``expected_requests`` acks have
     landed, or after ``stream_idle_polls`` consecutive iterations with
-    no messages and no active work.
+    no messages and no active work; with ``stream_slice_ticks`` > 0 it
+    additionally yields the lease every that-many engine ticks (elastic
+    mode — see the module docstring).
     """
     out = job.get("output_prefix", "serve/stream0")
-    rq = DurableQueue(
-        str(job["request_queue"]),
-        default_visibility=float(job.get("request_visibility", 120.0)),
-        clock=ctx.clock,
+    req_prefix = f"{out}/requests/"
+    slice_ticks = int(job.get("stream_slice_ticks", 0))
+    wid_safe = ctx.worker_id.replace("/", "~")
+    # elastic leases write per-worker summaries (many workers share one
+    # output prefix); the legacy single-holder lease keeps RESULTS.json
+    results_key = (
+        f"{out}/RESULTS-{wid_safe}.json" if slice_ticks else f"{out}/RESULTS.json"
     )
     expected: Optional[int] = (
         int(job["expected_requests"]) if job.get("expected_requests") else None
     )
+    key = (ctx.worker_id, str(job["request_queue"]), out)
+    st = _LEASE_STATES.get(key)
+
+    if ctx.revoked():
+        if st is not None:
+            # our notice arrived between slices: this claim is the drain
+            _revocation_drain(ctx, st, wid_safe)
+            raise LeaseYield("revocation notice: drained", retry_in=0.0)
+        # nothing of ours to drain — refuse new work for the remainder
+        # of the notice window (the fleet reclaims the machine shortly)
+        raise NotReady("revocation notice: refusing new lease", retry_in=0.0)
+
+    def _served_uids() -> set:
+        # lease memory is O(inflight), not O(total served): completions
+        # live in the object store (one record per request, written
+        # before the ack) and only the uid SET is held in RAM.  Records
+        # persisted by a previous (crashed/revoked) holder seed the set,
+        # so ``expected_requests`` still terminates and the final
+        # summary includes them.
+        return {
+            info.key[len(req_prefix):-len(".json")]
+            for info in ctx.store.list(req_prefix)
+            if info.key.endswith(".json")
+        }
+
+    if st is None:
+        served = _served_uids()
+        if slice_ticks and expected is not None and len(served) >= expected:
+            # spare permit claimed after the fleet already finished:
+            # ack it without building an engine
+            summary = {"n_requests": 0, "noop": True}
+            if not ctx.store.exists(results_key):
+                ctx.store.put_json(results_key, summary)
+            return summary
+        engine = _build_engine(job, ctx)
+        rq = DurableQueue(
+            str(job["request_queue"]),
+            default_visibility=float(job.get("request_visibility", 120.0)),
+            # the DLQ threshold is a consumer-side setting: every lease on
+            # this queue must claim with the same one or they disagree on
+            # when a poison request is dead
+            max_receive_count=int(job.get("request_max_receive_count", 3)),
+            clock=ctx.clock,
+        )
+        st = _LeaseState(key, ctx, out, req_prefix, results_key, engine, rq)
+        st.served = served
+        if served:
+            # cold build joining a run with prior progress: a resume.
+            # (Hard-killed segments lose their in-memory counters — crash
+            # semantics; drained segments persisted theirs under leases/.)
+            engine.stats.lease_resumes += 1
+        _LEASE_STATES[key] = st
+    else:
+        # warm resume by the same worker: re-point the engine's heartbeat
+        # at THIS claim's context (lease extension needs the new receipt)
+        st.ctx = ctx
+        st.engine.heartbeat = lambda: ctx.heartbeat()
+        st.last_ext = ctx.clock.now()
+
+    engine, rq = st.engine, st.rq
+    inflight, served = st.inflight, st.served
     # generous idle default (~2.5 s of queue quiet at the default poll):
     # the lease ending strands later arrivals with no consumer, so err
     # well past ordinary arrival gaps; tune down for batch-like use
     idle_limit = int(job.get("stream_idle_polls", 50))
     poll = float(job.get("stream_poll_seconds", 0.05))
     vis = rq.default_visibility
-    inflight: Dict[str, object] = {}  # uid -> queue Message (unacked)
-    # lease memory is O(inflight), not O(total served): completions live
-    # in the object store (one record per request, written before the
-    # ack), and only the served uid SET is held in RAM.  A redelivered
-    # served uid reads its record back to distinguish duplicate from
-    # collision — rare path, one store read.
-    # Lease retry/resume falls out of the same shape: records persisted
-    # by a previous (crashed) holder seed the set, so
-    # ``expected_requests`` (total served) still terminates and the
-    # final summary includes them.
-    req_prefix = f"{out}/requests/"
-    served = {
-        info.key[len(req_prefix):-len(".json")]
-        for info in ctx.store.list(req_prefix)
-        if info.key.endswith(".json")
-    }
-    acked = 0  # THIS worker's acks (returned as n_requests)
-    idle = 0
-    last_ext = ctx.clock.now()
-    # lease-start marks for the latency window, as ABSOLUTE sample ids:
-    # the per-loop trim_samples below drops old entries, and raw list
-    # lengths recorded here would silently slide to a later window —
-    # sample_marks()/timing() stay anchored across trims
-    marks = engine.scheduler.sample_marks()
+    iters = 0
     try:
         while True:
+            if ctx.revoked():
+                # notice arrived mid-slice (a beat-triggered fault)
+                _revocation_drain(ctx, st, wid_safe)
+                raise LeaseYield("revocation notice: drained", retry_in=0.0)
             # keep a pending backlog one batch deep so freed rows refill
             # from local memory instead of waiting on a queue round-trip
             backlog = len(engine.pending) + sum(
@@ -263,6 +477,11 @@ def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
                     # and the served request marches to the DLQ
                     inflight[req.uid] = m
                     continue
+                if m.receive_count > 1:
+                    # a request delivered before (requeued by a drain or
+                    # resurfaced by a dead worker's visibility timeout)
+                    # resuming on this lease
+                    engine.stats.requests_resumed += 1
                 inflight[req.uid] = m
                 engine.submit([req])
             progressed = bool(claimed)
@@ -272,7 +491,11 @@ def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
             # drain (not slice) the finished list: a long-lived lease
             # must not retain every served Request object forever
             for r in engine.scheduler.drain_finished():
-                rec = {"prompt": r.prompt, "completion": r.output}
+                rec = {
+                    "prompt": r.prompt,
+                    "completion": r.output,
+                    "done_at": ctx.clock.now(),
+                }
                 m = inflight.pop(r.uid, None)
                 if m is not None:
                     # durable-before-ack: the completion must be in the
@@ -282,35 +505,59 @@ def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
                     # timeout cannot resurface a deleted message)
                     ctx.store.put_json(f"{req_prefix}{r.uid}.json", rec)
                     rq.delete(m)  # per-request ack: at-least-once upheld
-                    acked += 1
+                    st.acked += 1
                 served.add(r.uid)
             # a preempted-and-requeued request is still in ``inflight``:
             # its lease (and every other in-flight lease) is extended here,
             # so durable requeue happens only if THIS worker dies
             now = ctx.clock.now()
-            if inflight and now - last_ext > vis / 2:
+            if inflight and now - st.last_ext > vis / 2:
                 for m in inflight.values():
                     rq.change_visibility(m, vis)
-                last_ext = now
+                st.last_ext = now
             # bound per-lease memory: keep only a recent latency window
             # (the reported percentiles describe it) — Request objects
             # are already drained above
             engine.scheduler.trim_samples(10_000)
             ctx.heartbeat()
+            iters += 1
             if expected is not None and len(served) >= expected:
                 break
             if progressed:
-                idle = 0
+                st.idle = 0
             else:
-                idle += 1
-                if idle >= idle_limit:
+                st.idle += 1
+                if st.idle >= idle_limit:
                     break
                 ctx.clock.sleep(poll)
-    finally:
-        rq.close()
-        # lease end is a drain seam: background prefix-store publishes
-        # must be durable before the lease's counters are reported
-        engine.cache_mgr.flush_store()
+            if slice_ticks and iters >= slice_ticks:
+                engine.stats.lease_slices += 1
+                _report_progress(ctx, st)
+                raise LeaseYield(
+                    f"slice budget spent ({slice_ticks} engine ticks)",
+                    retry_in=0.0,
+                )
+    except LeaseYield:
+        raise  # warm state stays cached for the next claim
+    except BaseException:
+        # crash/preemption: drop the warm state.  Unacked requests
+        # resurface via their visibility timeouts — the at-least-once
+        # story — and in-memory segment counters are lost (a crash is a
+        # crash).  Publications are flushed as before so survivors can
+        # still hydrate this segment's pages.
+        _LEASE_STATES.pop(key, None)
+        try:
+            engine.cache_mgr.flush_store()
+        finally:
+            rq.close()
+        raise
+    # completed: this holder saw the run through to its exit condition
+    _LEASE_STATES.pop(key, None)
+    _report_progress(ctx, st)
+    rq.close()
+    # lease end is a drain seam: background prefix-store publishes
+    # must be durable before the lease's counters are reported
+    engine.cache_mgr.flush_store()
     # lease-end aggregate, assembled FROM the per-request records (the
     # single source of truth); only this one-shot summary materializes
     # every completion in memory at once
@@ -324,9 +571,9 @@ def _serve_stream(job: Dict, ctx: WorkerContext, engine: ServeEngine) -> Dict:
     # samples still retained after trims are summarizable, and the count
     # of trimmed-away samples is reported alongside so a bounded window
     # is visible, not silent
-    snap["timing"] = engine.scheduler.timing(**marks)
+    snap["timing"] = engine.scheduler.timing(**st.marks)
     snap["timing_samples_trimmed"] = (
         engine.scheduler.waits_dropped + engine.scheduler.ttfts_dropped
     )
-    ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **snap})
-    return {"n_requests": acked, **snap}
+    ctx.store.put_json(results_key, {"requests": results, **snap})
+    return {"n_requests": st.acked, **snap}

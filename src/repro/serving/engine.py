@@ -79,6 +79,20 @@ __all__ = ["Request", "ServeEngine", "Slot"]
 _Slot = Slot
 
 
+def _jit_cached(model: Model, key: tuple, builder: Callable) -> Callable:
+    """Memoize a jitted dispatch on the *model* instance.
+
+    The jit targets close over (model, seed, sample_on_device) only —
+    params are call arguments — so every engine built on the same model
+    with the same key can share one compiled function.  Elastic serving
+    rebuilds engines after every lease takeover/revocation; without this
+    each rebuild would retrace and recompile the same program."""
+    memo = model.__dict__.setdefault("_jit_memo", {})
+    if key not in memo:
+        memo[key] = jax.jit(builder())
+    return memo[key]
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -175,7 +189,10 @@ class ServeEngine:
 
         self.rng = np.random.default_rng(rng_seed)
         self._rng_seed = rng_seed
-        self._decode = jax.jit(make_decode_step(model, rng_seed, sample_on_device))
+        self._decode = _jit_cached(
+            model, ("decode", rng_seed, sample_on_device),
+            lambda: make_decode_step(model, rng_seed, sample_on_device),
+        )
         self._use_prefill = (
             dispatch_mode == "fused"
             and self.prefill_chunk > 0
@@ -183,7 +200,10 @@ class ServeEngine:
             and not self.cache_mgr.cache_is_rolling()
         )
         self._prefill = (
-            jax.jit(make_prefill_step(model, rng_seed, sample_on_device))
+            _jit_cached(
+                model, ("prefill", rng_seed, sample_on_device),
+                lambda: make_prefill_step(model, rng_seed, sample_on_device),
+            )
             if self._use_prefill
             else None
         )
@@ -225,7 +245,10 @@ class ServeEngine:
                     "prefill_chunk > 0, fused-prefill-capable arch, "
                     "non-rolling cache); it cannot run here"
                 )
-            self._verify = jax.jit(make_verify_step(model, rng_seed))
+            self._verify = _jit_cached(
+                model, ("verify", rng_seed),
+                lambda: make_verify_step(model, rng_seed),
+            )
             if speculative == "ngram":
                 self.proposer = NgramProposer()
             else:
@@ -780,6 +803,8 @@ for _name in (
     "prefix_store_tokens_hydrated",
     "spec_dispatches", "draft_dispatches",
     "draft_tokens_proposed", "draft_tokens_accepted", "spec_tokens_emitted",
+    "revocation_notices", "drain_requeued_requests", "requests_resumed",
+    "lease_slices", "lease_resumes",
 ):
     setattr(ServeEngine, _name, _stats_alias(_name))
 for _name in (

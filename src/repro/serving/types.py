@@ -77,8 +77,10 @@ class Slot:
 @dataclass
 class EngineStats:
     """Engine-wide counters.  Owner key: [X] executor, [S] scheduler,
-    [C] cache manager.  Fields prefixed ``_`` are internal working state
-    and stay out of :meth:`snapshot`."""
+    [C] cache manager, [L] serving lease (the ``distributed-serve``
+    payload, writing through the engine's stat aliases).  Fields
+    prefixed ``_`` are internal working state and stay out of
+    :meth:`snapshot`."""
 
     # [X] dispatch accounting
     steps_executed: int = 0  # jitted decode calls (seed-compatible name)
@@ -127,6 +129,18 @@ class EngineStats:
     draft_tokens_proposed: int = 0
     draft_tokens_accepted: int = 0
     spec_tokens_emitted: int = 0  # all tokens emitted by verify dispatches
+    # [L] elastic-lease robustness: spot-revocation notices observed by
+    # this lease; in-flight request messages it made visible again while
+    # draining; request messages it claimed that had been delivered
+    # before (a requeued request resuming on a survivor); slice yields;
+    # cold engine builds that found prior progress in the store (a lease
+    # resuming after churn — prefix-store hydration is what makes these
+    # cheap).
+    revocation_notices: int = 0
+    drain_requeued_requests: int = 0
+    requests_resumed: int = 0
+    lease_slices: int = 0
+    lease_resumes: int = 0
 
     def snapshot(self) -> Dict[str, int]:
         """Every public counter as a plain dict (RESULTS.json payload),
@@ -148,7 +162,8 @@ def percentiles(samples: List[Optional[int]]) -> Dict[str, float]:
     place so windowing by list index stays stable) are excluded."""
     s = sorted(x for x in samples if x is not None)
     if not s:
-        return {"n": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0, "max": 0.0}
+        return {"n": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0,
+                "max": 0.0}
     n = len(s)
     return {
         "n": n,
@@ -156,5 +171,6 @@ def percentiles(samples: List[Optional[int]]) -> Dict[str, float]:
         # nearest-rank percentiles: index ceil(q*n) - 1
         "p50": float(s[(n - 1) // 2]),
         "p90": float(s[(9 * n - 1) // 10]),
+        "p99": float(s[(99 * n - 1) // 100]),
         "max": float(s[-1]),
     }

@@ -87,6 +87,22 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     assert cont["mean_ttft_ticks"] < drain["mean_ttft_ticks"]
     assert cb["ttft_reduction"] > 1.0
     assert cont["tokens_emitted"] == drain["tokens_emitted"]
+    # elastic-churn drill: both fleets ride out >= 2 mid-spike spot
+    # revocations losing nothing and diverging nowhere (rc=0 above gates
+    # the hard failures); the autoscaled fleet must beat the static p99
+    # and its survivors must hydrate the shared prefix from the store
+    churn = report["elastic_churn"]["engines"]
+    for fleet_name in ("static", "autoscaled"):
+        eng = churn[fleet_name]
+        assert eng["lost_requests"] == 0
+        assert eng["byte_identical"] is True
+        assert eng["revocations_injected"] >= 2
+        assert eng["revocation_notices"] >= 1  # somebody drained gracefully
+    assert churn["autoscaled"]["prefix_store_pages_hydrated"] > 0
+    assert churn["autoscaled"]["workers_peak"] > churn["static"]["workers_peak"]
+    assert (churn["autoscaled"]["p99_ttft_s"]
+            < churn["static"]["p99_ttft_s"])
+    assert report["elastic_churn"]["p99_ttft_reduction"] > 1.0
     # the freshly-generated report must satisfy the published schema,
     # and every scenario block must be gated by this test file
     assert check_bench.check_report(report) == []
