@@ -220,20 +220,35 @@ _CHURN_COUNTERS = (
     "revocation_notices", "drain_requeued_requests", "requests_resumed",
     "lease_slices", "lease_resumes",
     "prefix_store_pages_hydrated", "prefix_store_pages_published",
+    # work-preserving recovery: generation checkpoints written at drain,
+    # resumes that restored emitted tokens from them, and the fallback /
+    # flaky-storage books that prove the degradation ladder was walked
+    "checkpoints_published", "checkpoint_resumes", "tokens_recovered",
+    "checkpoint_fallbacks", "decode_tokens_discarded",
+    "publish_retries", "prefix_store_hash_mismatches",
 )
 
 
 def run_churn_fleet(*, label: str, autoscale: str, max_fleet: int, bodies,
                     serve_job: dict, arrivals: dict, chaos_seed: int,
                     workdir: str, tick_seconds: float = 30.0,
-                    max_ticks: int = 600) -> dict:
+                    max_ticks: int = 600, flaky_duration: float = 0.0,
+                    flaky_scope: str = "",
+                    sabotage_checkpoints: bool = False) -> dict:
     """One simulated serving fleet under an arrival spike and a seeded
     spot-revocation drill: elastic serving leases stream requests from a
     shared DurableQueue, the chaos monkey revokes instances mid-spike
     (the victims drain gracefully and requeue their in-flight work), and
     survivors/replacements resume it — hydrating the shared prefix's KV
     page from the object store instead of re-prefilling.  All latency is
-    virtual-clock, so the numbers are deterministic on any host."""
+    virtual-clock, so the numbers are deterministic on any host.
+
+    ``flaky_duration`` > 0 opens a transient storage+queue fault window
+    alongside every revocation (``ChaosMonkey.recovery_drill``), so the
+    drain/resume paths must survive first-attempt put/get/receive
+    failures via retry.  ``sabotage_checkpoints`` makes every generation
+    checkpoint unreadable (reads under ``checkpoints/`` raise), forcing
+    resumes down the fallback ladder to prefix-hit full replay."""
     from repro.core import (
         DSConfig, DSRuntime, FleetFile, JobFile, SimRunner, VirtualClock,
     )
@@ -277,6 +292,20 @@ def run_churn_fleet(*, label: str, autoscale: str, max_fleet: int, bodies,
     rt = DSRuntime(cfg, store_root=os.path.join(workdir, f"store_{label}"),
                    clock=clk)
     rt.setup()
+    if sabotage_checkpoints:
+        # total checkpoint loss: puts still land (the durable-before-ack
+        # ordering is still exercised) but every read raises, so every
+        # resume must fall back to prefix-hit full replay.  The chaos
+        # monkey's flaky wrapper stacks on top of this one, so reads are
+        # ALSO transiently faulted first — the full ladder in one leg.
+        _orig_get = rt.store.get_bytes
+
+        def _sabotaged_get(key, *a, **kw):
+            if "/checkpoints/" in key:
+                raise FileNotFoundError(f"chaos: checkpoint sabotaged {key!r}")
+            return _orig_get(key, *a, **kw)
+
+        rt.store.get_bytes = _sabotaged_get
     rq_path = os.path.join(workdir, f"requests_{label}.sqlite")
     rq = DurableQueue(
         rq_path,
@@ -294,11 +323,20 @@ def run_churn_fleet(*, label: str, autoscale: str, max_fleet: int, bodies,
     # whose victim pool is empty (everything already revoked) stays
     # pending and fires once a replacement is running, so the static
     # single-machine fleet eats both revocations back to back
-    chaos = ChaosMonkey.revocation_drill(
-        rt.fleet, clk, seed=chaos_seed, n_revocations=2,
-        start=3 * tick_seconds, spacing=3 * tick_seconds,
-        notice_seconds=2 * tick_seconds, store=rt.store, logs=rt.logs,
-    )
+    if flaky_duration > 0:
+        chaos = ChaosMonkey.recovery_drill(
+            rt.fleet, clk, seed=chaos_seed, n_revocations=2,
+            start=3 * tick_seconds, spacing=3 * tick_seconds,
+            notice_seconds=2 * tick_seconds,
+            flaky_duration=flaky_duration, flaky_scope=flaky_scope,
+            store=rt.store, logs=rt.logs, queue=rq,
+        )
+    else:
+        chaos = ChaosMonkey.revocation_drill(
+            rt.fleet, clk, seed=chaos_seed, n_revocations=2,
+            start=3 * tick_seconds, spacing=3 * tick_seconds,
+            notice_seconds=2 * tick_seconds, store=rt.store, logs=rt.logs,
+        )
     submitted_at = {}
 
     def on_tick(t):
@@ -315,13 +353,25 @@ def run_churn_fleet(*, label: str, autoscale: str, max_fleet: int, bodies,
         for info in rt.store.list(req_prefix)
         if info.key.endswith(".json")
     }
-    counters = {k: 0 for k in _CHURN_COUNTERS}
+    # one cumulative record per worker: the final RESULTS- summary where
+    # the worker wrote one, else its last slice/drain record under
+    # leases/ (summing both would double-count — each is cumulative)
+    finals, slices = {}, {}
     for seg_prefix in ("serve/churn/RESULTS-", "serve/churn/leases/"):
         for info in rt.store.list(seg_prefix):
-            seg = rt.store.get_json(info.key)
-            for k in counters:
-                # noop permit summaries carry no counter block
-                counters[k] += int(seg.get(k, 0))
+            if not info.key.endswith(".json"):
+                continue
+            base = info.key.rsplit("/", 1)[-1][:-len(".json")]
+            if "/leases/" in info.key:
+                slices[base] = rt.store.get_json(info.key)
+            else:
+                finals[base.split("RESULTS-", 1)[-1]] = (
+                    rt.store.get_json(info.key))
+    counters = {k: 0 for k in _CHURN_COUNTERS}
+    for seg in {**slices, **finals}.values():
+        for k in counters:
+            # noop permit summaries carry no counter block
+            counters[k] += int(seg.get(k, 0))
     # client-observed latency: submit (queue send) -> completion record,
     # in virtual seconds.  p99 over the request population is the
     # fleet-level SLO the autoscaler is being graded on.
@@ -342,6 +392,20 @@ def run_churn_fleet(*, label: str, autoscale: str, max_fleet: int, bodies,
         "lease_resumes": counters["lease_resumes"],
         "prefix_store_pages_hydrated": counters["prefix_store_pages_hydrated"],
         "prefix_store_pages_published": counters["prefix_store_pages_published"],
+        "checkpoints_published": counters["checkpoints_published"],
+        "checkpoint_resumes": counters["checkpoint_resumes"],
+        "tokens_recovered": counters["tokens_recovered"],
+        "checkpoint_fallbacks": counters["checkpoint_fallbacks"],
+        "decode_tokens_discarded": counters["decode_tokens_discarded"],
+        "publish_retries": counters["publish_retries"],
+        "prefix_store_hash_mismatches": counters["prefix_store_hash_mismatches"],
+        # tokens decode had to redo: everything rolled back at preemption
+        # minus everything a checkpoint resume restored (the held-back
+        # re-dispatch token stays, by design)
+        "tokens_redecoded": (counters["decode_tokens_discarded"]
+                             - counters["tokens_recovered"]),
+        "storage_faults": chaos.counters.get("storage_faults", 0),
+        "queue_faults": chaos.counters.get("queue_faults", 0),
         "workers_peak": max(
             (r.running_instances for r in runner.monitor.history), default=0),
         "ticks": summary.ticks,
@@ -772,6 +836,8 @@ def main(argv=None) -> int:
     # p99 win and the survivors' prefix-store hydration are the payoff
     churn_results = {}
     churn_scenario = {}
+    recovery_results = {}
+    recovery_scenario = {}
     if model.supports_paged_cache:
         import tempfile
 
@@ -841,6 +907,74 @@ def main(argv=None) -> int:
                     f"resumed={r['requests_resumed']} "
                     f"hydrated={r['prefix_store_pages_hydrated']} "
                     f"workers_peak={r['workers_peak']} "
+                    f"identical={r['byte_identical']}"
+                )
+
+        # ------------------------------------------- recovery drill
+        # the same spike and seeded revocations, now with transient
+        # storage/queue fault windows riding along every notice.  Three
+        # fleets, identical chaos: generation checkpoints OFF (every
+        # drained request replays its decode from token zero),
+        # checkpoints ON (drained requests resume mid-generation and
+        # continue pure decode), and checkpoints ON but sabotaged (every
+        # record unreadable, so resumes walk the fallback ladder down to
+        # prefix-hit full replay).  All three must be byte-identical to
+        # the undisturbed oracle and lose nothing; the checkpoint fleet
+        # must re-decode a small fraction of the replay fleet's tokens.
+        rc_requests = 8 if args.smoke else 16
+        rc_new = 14 if args.smoke else 16
+        rc_seed = 4321
+        rc_flaky = 120.0  # covers notice -> drain -> early resume
+        rc_bodies = churn_request_bodies(rc_requests, rc_new,
+                                         prefix_len=page_size, tail_len=3,
+                                         seed=33)
+        rc_job = dict(ch_job, max_new_tokens=rc_new)
+        rc_arrivals = {2: rc_bodies[:3], 4: rc_bodies[3:]}
+        recovery_scenario = {
+            "n_requests": rc_requests, "max_new_tokens": rc_new,
+            "max_batch": 2, "prefill_chunk": 8, "page_size": page_size,
+            "prefix_len": page_size, "stream_slice_ticks": 4,
+            "chaos_seed": rc_seed, "n_revocations": 2,
+            "notice_seconds": 60.0, "tick_seconds": 30.0,
+            "flaky_duration": rc_flaky,
+            "min_workers": 1, "max_workers": 3,
+            "arrivals_by_tick": {str(k): len(v)
+                                 for k, v in rc_arrivals.items()},
+        }
+        rc_oracle_eng = ServeEngine(model, params, max_batch=2, max_len=64,
+                                    prefill_chunk=8)
+        rc_oracle_eng.submit([
+            Request(uid=b["uid"], prompt=list(b["prompt"]),
+                    max_new_tokens=rc_new)
+            for b in rc_bodies
+        ])
+        rc_oracle_eng.run_to_completion()
+        rc_oracle = {r.uid: list(r.output) for r in rc_oracle_eng.finished}
+        with tempfile.TemporaryDirectory() as rc_dir:
+            for name, job_over, sab in (
+                    ("replay", {"generation_checkpoints": False}, False),
+                    ("checkpoint", {}, False),
+                    ("sabotage", {}, True)):
+                r = run_churn_fleet(
+                    label=name, autoscale="slo", max_fleet=3,
+                    bodies=rc_bodies, serve_job=dict(rc_job, **job_over),
+                    arrivals=rc_arrivals, chaos_seed=rc_seed,
+                    workdir=rc_dir, flaky_duration=rc_flaky,
+                    flaky_scope="serve/churn/,kvprefix/",
+                    sabotage_checkpoints=sab,
+                )
+                r["byte_identical"] = r["outputs"] == rc_oracle
+                recovery_results[name] = r
+                print(
+                    f"[bench_serving] recovery/{name:10s} "
+                    f"lost={r['lost_requests']} "
+                    f"ckpts={r['checkpoints_published']} "
+                    f"resumes={r['checkpoint_resumes']} "
+                    f"recovered={r['tokens_recovered']} "
+                    f"redecoded={r['tokens_redecoded']} "
+                    f"fallbacks={r['checkpoint_fallbacks']} "
+                    f"storage_faults={r['storage_faults']} "
+                    f"queue_faults={r['queue_faults']} "
                     f"identical={r['byte_identical']}"
                 )
 
@@ -921,6 +1055,18 @@ def main(argv=None) -> int:
                 / max(churn_results["autoscaled"]["p99_ttft_s"], 1e-9), 2
             ),
         }
+    if recovery_results:
+        report["recovery_drill"] = {
+            "scenario": recovery_scenario,
+            "engines": recovery_results,
+            # how many fewer tokens the checkpointing fleet had to decode
+            # twice, vs replaying every drained generation from scratch
+            "redecode_reduction": round(
+                recovery_results["replay"]["tokens_redecoded"]
+                / max(recovery_results["checkpoint"]["tokens_redecoded"], 1),
+                2,
+            ),
+        }
     if midpage_results:
         mp_page = midpage_results["paged_prefix_page"]
         mp_tok = midpage_results["paged_prefix_token"]
@@ -941,7 +1087,8 @@ def main(argv=None) -> int:
                           ("midpage/", midpage_results),
                           ("spec/", spec_results),
                           ("staggered/", staggered_results),
-                          ("churn/", churn_results)):
+                          ("churn/", churn_results),
+                          ("recovery/", recovery_results)):
         for name, r in group.items():
             outputs[prefix + name] = r.pop("outputs")
     with open(args.out, "w") as f:
@@ -966,6 +1113,9 @@ def main(argv=None) -> int:
           + (f", churn p99 reduction "
              f"{report['elastic_churn']['p99_ttft_reduction']}x"
              if churn_results else "")
+          + (f", recovery re-decode reduction "
+             f"{report['recovery_drill']['redecode_reduction']}x"
+             if recovery_results else "")
           + ")")
 
     # the whole point of the fused engine: strictly fewer dispatches/token
@@ -1115,6 +1265,61 @@ def main(argv=None) -> int:
                 >= churn_results["static"]["p99_ttft_s"]):
             print("[bench_serving] REGRESSION: autoscaled fleet did not "
                   "beat the static fleet's p99 turnaround under churn")
+            return 1
+    if recovery_results:
+        for name in ("replay", "checkpoint", "sabotage"):
+            r = recovery_results[name]
+            # same hard gates as churn: revocations + flaky storage must
+            # lose NOTHING and change NOTHING, whichever rung of the
+            # fallback ladder the fleet lands on
+            if r["lost_requests"] != 0 or not r["byte_identical"]:
+                print(f"[bench_serving] REGRESSION: recovery/{name} lost "
+                      f"{r['lost_requests']} request(s) or diverged from "
+                      "the undisturbed run")
+                return 1
+            if r["revocations_injected"] < 2:
+                print(f"[bench_serving] REGRESSION: recovery/{name} injected "
+                      f"only {r['revocations_injected']} revocation(s)")
+                return 1
+            # the flaky windows must actually have injected faults the
+            # retry/backoff discipline then survived
+            if r["storage_faults"] <= 0 or r["queue_faults"] <= 0:
+                print(f"[bench_serving] REGRESSION: recovery/{name} saw no "
+                      f"injected storage ({r['storage_faults']}) or queue "
+                      f"({r['queue_faults']}) faults")
+                return 1
+        rr = recovery_results["replay"]
+        rc = recovery_results["checkpoint"]
+        rs = recovery_results["sabotage"]
+        # the baseline must really be checkpoint-free and really have had
+        # decode progress to lose, or the comparison is vacuous
+        if rr["checkpoints_published"] != 0 or rr["tokens_recovered"] != 0:
+            print("[bench_serving] REGRESSION: recovery/replay leg wrote "
+                  "checkpoints despite generation_checkpoints=false")
+            return 1
+        if rr["tokens_redecoded"] <= 0:
+            print("[bench_serving] REGRESSION: recovery drill never "
+                  "interrupted a generation mid-decode")
+            return 1
+        # the tentpole's payoff: checkpointed drains hand their emitted
+        # tail to the resuming worker instead of re-decoding it
+        if (rc["checkpoints_published"] <= 0 or rc["checkpoint_resumes"] <= 0
+                or rc["tokens_recovered"] <= 0):
+            print("[bench_serving] REGRESSION: recovery/checkpoint leg never "
+                  "resumed from a generation checkpoint")
+            return 1
+        if report["recovery_drill"]["redecode_reduction"] < 3.0:
+            print(f"[bench_serving] REGRESSION: re-decode reduction "
+                  f"{report['recovery_drill']['redecode_reduction']}x < 3x")
+            return 1
+        # fallback ladder: with every checkpoint unreadable the fleet must
+        # degrade to full replay (counted), never resume from a checkpoint,
+        # and still change nothing
+        if rs["checkpoint_fallbacks"] <= 0 or rs["checkpoint_resumes"] != 0:
+            print("[bench_serving] REGRESSION: recovery/sabotage leg did not "
+                  "walk the checkpoint fallback ladder "
+                  f"(fallbacks={rs['checkpoint_fallbacks']}, "
+                  f"resumes={rs['checkpoint_resumes']})")
             return 1
     return 0
 

@@ -51,6 +51,16 @@ CHURN_KEYS = ("sim_seconds", "tokens_per_sim_s", "p99_ttft_s",
               "lost_requests", "revocations_injected", "requests_requeued",
               "requests_resumed", "prefix_store_pages_hydrated",
               "byte_identical", "workers_peak")
+# the recovery drill adds the work-preserving-recovery books on top of
+# the fleet-robustness facts: generation-checkpoint activity, the
+# re-decode accounting the headline ratio is derived from, and the
+# injected-fault counts proving the flaky windows actually fired
+RECOVERY_KEYS = CHURN_KEYS + (
+    "checkpoints_published", "checkpoint_resumes", "tokens_recovered",
+    "checkpoint_fallbacks", "decode_tokens_discarded", "tokens_redecoded",
+    "publish_retries", "prefix_store_hash_mismatches",
+    "storage_faults", "queue_faults",
+)
 
 # scenario block -> (path to its engines dict, required engine names,
 # per-engine required keys, block-level derived metrics)
@@ -74,6 +84,9 @@ SCENARIOS = {
     "elastic_churn": (("elastic_churn", "engines"),
                       ("static", "autoscaled"), CHURN_KEYS,
                       ("p99_ttft_reduction",)),
+    "recovery_drill": (("recovery_drill", "engines"),
+                       ("replay", "checkpoint", "sabotage"), RECOVERY_KEYS,
+                       ("redecode_reduction",)),
 }
 
 

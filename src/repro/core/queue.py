@@ -29,9 +29,28 @@ import sqlite3
 import threading
 import uuid
 from dataclasses import dataclass
-from typing import Any, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from .clock import Clock, WallClock
+
+# Fault-injection seam for chaos drills.  Hooks are registered per queue
+# *path*, not per instance: every lease opens its own handle on the same
+# sqlite file, so an instance-level wrapper would miss the consumers that
+# matter.  A registered hook is called as ``hook(op, path)`` before the
+# consumer-side operations ("receive" / "delete"); raising from the hook
+# makes the call fail exactly as a transient network fault would, without
+# touching queue state.  Producer-side sends are never faulted — the
+# drills target the worker's retry discipline, not test setup.
+_FAULT_HOOKS: Dict[str, Callable[[str, str], None]] = {}
+
+
+def install_fault_hook(path: str, hook: Callable[[str, str], None]) -> None:
+    """Register (or replace) the fault hook for a queue path."""
+    _FAULT_HOOKS[os.path.abspath(path)] = hook
+
+
+def remove_fault_hook(path: str) -> None:
+    _FAULT_HOOKS.pop(os.path.abspath(path), None)
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS messages (
@@ -78,6 +97,7 @@ class DurableQueue:
         clock: Optional[Clock] = None,
     ):
         self.path = path
+        self._fault_key = os.path.abspath(path)
         self.default_visibility = float(default_visibility)
         self.max_receive_count = int(max_receive_count)
         self.clock = clock or WallClock()
@@ -89,6 +109,11 @@ class DurableQueue:
         self._conn.execute("PRAGMA synchronous=NORMAL")
         with self._lock, self._conn:
             self._conn.executescript(_SCHEMA)
+
+    def _maybe_fault(self, op: str) -> None:
+        hook = _FAULT_HOOKS.get(self._fault_key)
+        if hook is not None:
+            hook(op, self.path)
 
     # -- producer ----------------------------------------------------------
     def send(self, body: Any) -> str:
@@ -126,6 +151,7 @@ class DurableQueue:
         are encountered.  Returns fewer than ``max_messages`` (possibly
         none) if the queue runs dry.
         """
+        self._maybe_fault("receive")
         vt = self.default_visibility if visibility_timeout is None else float(visibility_timeout)
         now = self.clock.now()
         claimed: List[Message] = []
@@ -187,6 +213,7 @@ class DurableQueue:
 
         Returns the number actually deleted; stale receipts are no-ops,
         mirroring :meth:`delete`."""
+        self._maybe_fault("delete")
         with self._lock, self._conn:
             deleted = 0
             for m in messages:

@@ -60,12 +60,20 @@ fleet-level defaults operators copy into serve job templates.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import hashlib
+import json
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
 from repro.core.queue import DurableQueue
-from repro.core.worker import LeaseYield, NotReady, WorkerContext, register_payload
+from repro.core.worker import (
+    LeaseYield,
+    NotReady,
+    WorkerContext,
+    backoff_delay,
+    register_payload,
+)
 from repro.launch.train import build_model
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.prefix_store import PrefixStore
@@ -239,6 +247,86 @@ def _snapshot(engine: ServeEngine) -> Dict:
     return snap
 
 
+# --------------------------------------------- work-preserving recovery
+def _with_retries(op: Callable, *, key: str, clock, attempts: int = 4,
+                  base: float = 0.01, cap: float = 0.5):
+    """Run a store/queue operation with capped content-keyed backoff
+    against *transient* faults (``ConnectionError`` is what the chaos
+    harness's ``flaky_storage``/``flaky_queue`` faults raise, and what a
+    real S3/SQS SDK surfaces for retryable errors).  Anything else —
+    including ``FileNotFoundError`` misses — propagates immediately."""
+    for attempt in range(1, attempts + 1):
+        try:
+            return op()
+        except ConnectionError:
+            if attempt == attempts:
+                raise
+            clock.sleep(backoff_delay(base, attempt, cap=cap, key=key))
+
+
+def _uid_safe(uid: str) -> str:
+    return str(uid).replace("/", "~")
+
+
+def _seal_checkpoint(ckpt: Dict) -> Dict:
+    """Attach the sha256 of the canonical-JSON checkpoint body: the
+    resume path re-derives it, so a torn write or bit-flipped record is
+    detected and degrades to full replay instead of corrupting output."""
+    body = json.dumps(ckpt, sort_keys=True, separators=(",", ":"))
+    return {**ckpt, "sha": hashlib.sha256(body.encode("utf-8")).hexdigest()}
+
+
+def _checkpoint_valid(ckpt: Dict, req: Request) -> bool:
+    """A checkpoint is trusted only if its content hash verifies AND it
+    describes exactly the request the queue message carries (the message
+    is the source of truth; the checkpoint is an optimization)."""
+    if not isinstance(ckpt, dict) or "sha" not in ckpt:
+        return False
+    body = {k: v for k, v in ckpt.items() if k != "sha"}
+    digest = hashlib.sha256(
+        json.dumps(body, sort_keys=True, separators=(",", ":")).encode("utf-8")
+    ).hexdigest()
+    if digest != ckpt["sha"]:
+        return False
+    try:
+        output = [int(t) for t in ckpt["output"]]
+        return (
+            str(ckpt["uid"]) == req.uid
+            and [int(t) for t in ckpt["prompt"]] == req.prompt
+            and 0 < len(output) <= req.max_new_tokens
+            and int(ckpt["max_new_tokens"]) == req.max_new_tokens
+            and float(ckpt["temperature"]) == req.temperature
+            and ckpt.get("stop_token") == req.stop_token
+            and int(ckpt["sample_stream"]) >= 0
+        )
+    except (KeyError, TypeError, ValueError):
+        return False
+
+
+def _try_resume(engine: ServeEngine, ctx: WorkerContext, ckpt_prefix: str,
+                req: Request) -> Optional[Request]:
+    """Fallback ladder, rung one: admit ``req`` from its generation
+    checkpoint.  Returns the resumed Request, or None — counting a
+    ``checkpoint_fallback`` — when the checkpoint is missing, unreadable
+    or fails validation; the caller then submits the request normally
+    (rung two: whatever prefix pages survive in the store still turn
+    most of the replay into a stitch; rung three: full replay, byte-
+    identical either way via the deterministic sampling streams)."""
+    key = f"{ckpt_prefix}{_uid_safe(req.uid)}.json"
+    try:
+        ckpt = _with_retries(
+            lambda: ctx.store.get_json(key), key=key, clock=ctx.clock
+        )
+    except FileNotFoundError:
+        ckpt = None
+    except Exception:  # noqa: BLE001 - unreadable/corrupt blob: replay
+        ckpt = None
+    if ckpt is None or not _checkpoint_valid(ckpt, req):
+        engine.stats.checkpoint_fallbacks += 1
+        return None
+    return engine.submit_resume(ckpt)
+
+
 @register_payload("distributed-serve")
 def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
     if job.get("request_queue"):
@@ -267,7 +355,7 @@ class _LeaseState:
     __slots__ = (
         "key", "worker_id", "out", "req_prefix", "results_key", "ctx",
         "engine", "rq", "inflight", "served", "marks", "acked", "idle",
-        "last_ext",
+        "last_ext", "ckpt_prefix",
     )
 
     def __init__(self, key, ctx, out, req_prefix, results_key, engine, rq):
@@ -285,6 +373,9 @@ class _LeaseState:
         self.acked = 0  # THIS worker's acks (returned as n_requests)
         self.idle = 0
         self.last_ext = ctx.clock.now()
+        # generation-checkpoint prefix (None = work-preserving recovery
+        # disabled for this job); set right after construction
+        self.ckpt_prefix: Optional[str] = None
 
 
 def _report_progress(ctx: WorkerContext, st: _LeaseState) -> None:
@@ -306,18 +397,66 @@ def _report_progress(ctx: WorkerContext, st: _LeaseState) -> None:
     })
 
 
+def _persist_segment(ctx: WorkerContext, st: _LeaseState, wid_safe: str) -> None:
+    """Overwrite this worker's cumulative segment counters under
+    ``{out}/leases/``.  Called at every lease-slice yield and at drain,
+    so a worker whose permit is never re-claimed (another lease observed
+    completion first, or the host is reclaimed between slices) loses at
+    most one slice of counters instead of its whole segment.  Best
+    effort: counters are reporting, not correctness — a persistent
+    storage fault here is logged and dropped, never raised."""
+    engine = st.engine
+    snap = _snapshot(engine)
+    snap["timing"] = engine.scheduler.timing(**st.marks)
+    snap["n_requests"] = st.acked
+    snap["worker_id"] = st.worker_id
+    lease_key = f"{st.out}/leases/{wid_safe}.json"
+    try:
+        _with_retries(
+            lambda: ctx.store.put_json(lease_key, snap),
+            key=lease_key, clock=ctx.clock,
+        )
+    except Exception:  # noqa: BLE001
+        ctx.log("segment-counter persist failed (dropped)")
+
+
 def _revocation_drain(ctx: WorkerContext, st: _LeaseState, wid_safe: str) -> None:
     """Graceful spot-revocation drain, inside the notice window: stop
-    admitting, roll active rows back, flush prefix-store publications
-    (they must outlive this worker — hydration is what makes the
-    replacement cheap), make every in-flight request message visible
-    NOW (receive counts intact: churn must still march poison requests
-    toward the DLQ), and persist this segment's counters — the
-    replacement's summary cannot include them."""
+    admitting, checkpoint every active generation (emitted tokens +
+    sampling position durably recorded, resident KV — sub-page tail
+    included — published through the prefix store), roll active rows
+    back, flush prefix-store publications (they must outlive this
+    worker — hydration is what makes the replacement cheap), make every
+    in-flight request message visible NOW (receive counts intact: churn
+    must still march poison requests toward the DLQ), and persist this
+    segment's counters — the replacement's summary cannot include them.
+
+    Ordering is the whole contract: checkpoint records and page
+    publications land in the object store BEFORE the requeue makes the
+    messages claimable (durable-before-ack), so a resuming worker either
+    sees a complete checkpoint or none at all — never a half one."""
     engine = st.engine
     engine.stats.revocation_notices += 1
     for row, slot in enumerate(engine.slots):
         if slot.req is not None:
+            if st.ckpt_prefix is not None:
+                try:
+                    ckpt = engine.checkpoint_slot(row)
+                    if ckpt is not None:
+                        key = f"{st.ckpt_prefix}{_uid_safe(ckpt['uid'])}.json"
+                        _with_retries(
+                            lambda k=key, c=ckpt: ctx.store.put_json(
+                                k, _seal_checkpoint(c)
+                            ),
+                            key=key, clock=ctx.clock,
+                        )
+                except Exception:  # noqa: BLE001 - checkpointing is an
+                    # optimization: a storage fault here must never block
+                    # the drain (the request full-replays instead)
+                    ctx.log(
+                        f"checkpoint for {slot.req.uid!r} failed; "
+                        "request will replay from token zero"
+                    )
             engine.scheduler.preempt(row)
     # durable copies of everything local live in st.inflight; dropping
     # the local queue loses no requests
@@ -328,11 +467,7 @@ def _revocation_drain(ctx: WorkerContext, st: _LeaseState, wid_safe: str) -> Non
         if st.rq.change_visibility(m, 0.0):
             requeued += 1
     engine.stats.drain_requeued_requests += requeued
-    snap = _snapshot(engine)
-    snap["timing"] = engine.scheduler.timing(**st.marks)
-    snap["n_requests"] = st.acked
-    snap["worker_id"] = st.worker_id
-    ctx.store.put_json(f"{st.out}/leases/{wid_safe}.json", snap)
+    _persist_segment(ctx, st, wid_safe)
     _report_progress(ctx, st)
     _LEASE_STATES.pop(st.key, None)
     st.rq.close()
@@ -411,10 +546,13 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
         )
         st = _LeaseState(key, ctx, out, req_prefix, results_key, engine, rq)
         st.served = served
+        if job.get("generation_checkpoints", True):
+            st.ckpt_prefix = f"{out}/checkpoints/"
         if served:
             # cold build joining a run with prior progress: a resume.
-            # (Hard-killed segments lose their in-memory counters — crash
-            # semantics; drained segments persisted theirs under leases/.)
+            # (Hard-killed segments lose at most their LAST slice of
+            # counters — every slice yield persists the cumulative
+            # snapshot under leases/, and drains persist theirs too.)
             engine.stats.lease_resumes += 1
         _LEASE_STATES[key] = st
     else:
@@ -445,7 +583,13 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
                 1 for s in engine.slots if s.req is not None
             )
             want = 2 * engine.max_batch - backlog
-            claimed = rq.receive_batch(want) if want > 0 else []
+            claimed = (
+                _with_retries(
+                    lambda: rq.receive_batch(want),
+                    key=str(job["request_queue"]), clock=ctx.clock,
+                )
+                if want > 0 else []
+            )
             for m in claimed:
                 req = _request_from(m.body, job, fallback_uid=m.id)
                 # resolve client uid collisions FIRST: a DIFFERENT prompt
@@ -458,8 +602,10 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
                         int(t) for t in inflight[req.uid].body["prompt"]
                     ]
                 elif req.uid in served:
-                    known_prompt = ctx.store.get_json(
-                        f"{req_prefix}{req.uid}.json"
+                    rec_key = f"{req_prefix}{req.uid}.json"
+                    known_prompt = _with_retries(
+                        lambda: ctx.store.get_json(rec_key),
+                        key=rec_key, clock=ctx.clock,
                     )["prompt"]
                 if known_prompt is not None and known_prompt != req.prompt:
                     ctx.log(f"uid collision on {req.uid!r}: distinct prompt, "
@@ -468,7 +614,10 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
                 if req.uid in served:
                     # redelivery of a request already served here (its
                     # earlier delete hit a stale receipt): ack this copy
-                    rq.delete(m)
+                    _with_retries(
+                        lambda m=m: rq.delete(m),
+                        key=f"ack/{req.uid}", clock=ctx.clock,
+                    )
                     continue
                 if req.uid in inflight:
                     # duplicate delivery while the first copy is still
@@ -482,6 +631,15 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
                     # resurfaced by a dead worker's visibility timeout)
                     # resuming on this lease
                     engine.stats.requests_resumed += 1
+                    if st.ckpt_prefix is not None and _try_resume(
+                        engine, ctx, st.ckpt_prefix, req
+                    ) is not None:
+                        # work-preserving resume: admitted from its
+                        # generation checkpoint with the already-emitted
+                        # tokens pre-seeded — only the frontier token and
+                        # the remaining budget get decoded
+                        inflight[req.uid] = m
+                        continue
                 inflight[req.uid] = m
                 engine.submit([req])
             progressed = bool(claimed)
@@ -492,7 +650,11 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
             # must not retain every served Request object forever
             for r in engine.scheduler.drain_finished():
                 rec = {
-                    "prompt": r.prompt,
+                    # a checkpoint-resumed request ran with an extended
+                    # prompt; the record always carries the ORIGINAL one
+                    # (uid-collision checks and parity consumers compare
+                    # against what the client actually sent)
+                    "prompt": r.prompt[: len(r.prompt) - r.resume_base],
                     "completion": r.output,
                     "done_at": ctx.clock.now(),
                 }
@@ -502,9 +664,16 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
                     # object store BEFORE its message is deleted, or a
                     # worker crash between ack and the lease-end summary
                     # silently loses served requests (the visibility
-                    # timeout cannot resurface a deleted message)
-                    ctx.store.put_json(f"{req_prefix}{r.uid}.json", rec)
-                    rq.delete(m)  # per-request ack: at-least-once upheld
+                    # timeout cannot resurface a deleted message).  Both
+                    # sides retry through transient store/queue faults
+                    rec_key = f"{req_prefix}{r.uid}.json"
+                    _with_retries(
+                        lambda: ctx.store.put_json(rec_key, rec),
+                        key=rec_key, clock=ctx.clock,
+                    )
+                    _with_retries(  # per-request ack: at-least-once upheld
+                        lambda: rq.delete(m), key=rec_key, clock=ctx.clock,
+                    )
                     st.acked += 1
                 served.add(r.uid)
             # a preempted-and-requeued request is still in ``inflight``:
@@ -532,6 +701,10 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
                 ctx.clock.sleep(poll)
             if slice_ticks and iters >= slice_ticks:
                 engine.stats.lease_slices += 1
+                # counters survive even if this permit is never re-claimed
+                # (consumers dedup per worker: a final RESULTS- summary
+                # supersedes this slice-cumulative record)
+                _persist_segment(ctx, st, wid_safe)
                 _report_progress(ctx, st)
                 raise LeaseYield(
                     f"slice budget spent ({slice_ticks} engine ticks)",
@@ -562,7 +735,10 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
     # single source of truth); only this one-shot summary materializes
     # every completion in memory at once
     results = {
-        info.key[len(req_prefix):-len(".json")]: ctx.store.get_json(info.key)
+        info.key[len(req_prefix):-len(".json")]: _with_retries(
+            lambda k=info.key: ctx.store.get_json(k),
+            key=info.key, clock=ctx.clock,
+        )
         for info in ctx.store.list(req_prefix)
         if info.key.endswith(".json")
     }
@@ -575,5 +751,8 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
     snap["timing_samples_trimmed"] = (
         engine.scheduler.waits_dropped + engine.scheduler.ttfts_dropped
     )
-    ctx.store.put_json(results_key, {"requests": results, **snap})
+    _with_retries(
+        lambda: ctx.store.put_json(results_key, {"requests": results, **snap}),
+        key=results_key, clock=ctx.clock,
+    )
     return {"n_requests": st.acked, **snap}

@@ -572,6 +572,41 @@ class KVCacheManager:
             and len(path) < self.pages_per_slot
         ):
             partial = min(plen, len(prompt) - 1 - matched)
+        # extended-key tail hydration: when the full-chunk match leaves a
+        # sub-page remainder, another worker may have published exactly
+        # that tail page under the extended content key (a drained slot's
+        # generation checkpoint does — see publish_generation).  Fetching
+        # it into a slot-private page turns a resume's whole frontier
+        # into a hit; the hold-back still re-dispatches one token, whose
+        # idempotent write lands inside the private page.  Best-effort:
+        # free-list only, and skipped when a local partial sibling would
+        # cover at least as many tokens
+        tail_pid = None
+        rem = list(prompt[matched:])
+        if (
+            self.store is not None
+            and self.prefix_match == "token"
+            and len(path) < self.pages_per_slot
+            and 0 < len(rem) < self.page_size
+            and len(rem) - 1 > partial
+        ):
+            parent = (
+                self._chunk_keys(prompt, len(path))[-1]
+                if path else self.store.root_key()
+            )
+            tkey = self.store.child_key(parent, rem)
+            arrays = self.store.fetch(tkey, self._page_like())
+            self._sync_store_stats()
+            if arrays is not None:
+                pid = self._take_free_page()
+                if pid is not None:
+                    for name, arr in arrays.items():
+                        self.cache[name] = self.cache[name].at[:, pid].set(arr)
+                    tail_pid = pid
+                    partial = len(rem) - 1
+                    self._published.add(tkey)
+                    self.stats.prefix_store_pages_hydrated += 1
+                    self.stats.prefix_store_tokens_hydrated += partial
         if eff <= 0 and partial <= 0:
             return
         pages = self._slot_pages[row]
@@ -580,7 +615,12 @@ class KVCacheManager:
             self._table[row, j] = node.page
             pages.append(node.page)
         if partial > 0:
-            pid = self._cow_partial(pnode.page, row)
+            if tail_pid is not None:
+                pid = tail_pid
+            else:
+                pid = self._cow_partial(pnode.page, row)
+                if pid is not None:
+                    self.stats.cow_partial_stitches += 1
             if pid is None:
                 partial = 0  # no page to copy into: page-aligned fallback
             else:
@@ -589,7 +629,6 @@ class KVCacheManager:
                 eff += partial
                 slot.hit_tokens_partial = partial
                 self.stats.prefix_hit_tokens_partial += partial
-                self.stats.cow_partial_stitches += 1
                 if self.stats.pages_in_use > self.stats.peak_pages:
                     self.stats.peak_pages = self.stats.pages_in_use
         if eff <= 0:
@@ -694,6 +733,51 @@ class KVCacheManager:
                 self.stats.prefix_store_pages_published += 1
             self._published.add(key)
 
+    def publish_generation(self, row: int, tokens: List[int]) -> int:
+        """Publish a drained slot's resident KV — full chunks under the
+        usual chained keys PLUS the sub-page tail under an extended
+        content key — so a resuming worker gets a guaranteed prefix hit
+        over ``tokens`` (the request's prompt + already-generated output
+        minus the frontier token).  Today's page-quantized publish drops
+        the partial last page; work-preserving recovery is exactly the
+        case where that tail holds the paid-for decode work.  Returns
+        the number of pages newly submitted for publication."""
+        if self.store is None or self.cache_mode != "paged" or self.cache is None:
+            return 0
+        ps = self.page_size
+        pages = self._slot_pages[row]
+        before = self.stats.prefix_store_pages_published
+        n_full = min(len(tokens) // ps, len(pages))
+        if n_full:
+            self._publish(tokens, pages[:n_full], n_full)
+        tail = tokens[n_full * ps:]
+        if tail and n_full < len(pages):
+            parent = (
+                self._chunk_keys(tokens, n_full)[-1]
+                if n_full else self.store.root_key()
+            )
+            tkey = self.store.child_key(parent, tail)
+            if tkey not in self._published and not self.store.exists(tkey):
+                # the tail blob carries the whole physical page; rows past
+                # the tail frontier are garbage, but a hydrating reader
+                # never attends past the frontier (causal mask) and the
+                # hold-back re-dispatch overwrites the frontier position
+                if self._publisher is None:
+                    self._publisher = self.store.publisher()
+                self._publisher.submit(tkey, self._page_arrays(pages[n_full]))
+                self.stats.prefix_store_pages_published += 1
+            self._published.add(tkey)
+        return self.stats.prefix_store_pages_published - before
+
+    def _sync_store_stats(self) -> None:
+        """Mirror the store/publisher-owned hardening counters into the
+        shared stats block (they live on PrefixStore/AsyncPublisher so
+        the store path has no stats dependency)."""
+        if self.store is not None:
+            self.stats.prefix_store_hash_mismatches = self.store.hash_mismatches
+        if self._publisher is not None:
+            self.stats.publish_retries = self._publisher.retries
+
     def flush_store(self) -> None:
         """Drain the background publish queue (no-op without a store or
         before the first publish).  Called at the engine's natural drain
@@ -701,6 +785,71 @@ class KVCacheManager:
         or the process exits."""
         if self._publisher is not None:
             self._publisher.flush()
+        self._sync_store_stats()
+
+    # ------------------------------------------------------------ debugging
+    def check_invariants(self) -> None:
+        """Assert the allocator's structural invariants (enabled after
+        every engine tick under ``DS_DEBUG_INVARIANTS=1``):
+
+        - every page's refcount equals its holder count — slot tables
+          mapping it plus one if the radix cache indexes it (this also
+          rules out unshared cross-slot aliasing: two slots on one page
+          forces refcount >= 2);
+        - no slot maps the same physical page twice;
+        - the free list is duplicate-free, exactly the refcount-0 pages;
+        - the table shadow mirrors the slot page lists (OOB sentinel
+          past each slot's backing);
+        - ``pages_in_use`` equals pool size minus free pages.
+
+        Raises AssertionError with the failing page/slot on violation."""
+        if self.cache_mode != "paged" or self.cache is None:
+            return
+        holders = [0] * self.n_pages
+        for row, pages in enumerate(self._slot_pages):
+            if len(set(pages)) != len(pages):
+                raise AssertionError(
+                    f"slot {row} maps a physical page twice: {pages}"
+                )
+            for j, pid in enumerate(pages):
+                holders[pid] += 1
+                if self._table[row, j] != pid:
+                    raise AssertionError(
+                        f"table shadow desync at slot {row} page {j}: "
+                        f"table={self._table[row, j]} list={pid}"
+                    )
+            if not np.all(self._table[row, len(pages):] == self.n_pages):
+                raise AssertionError(
+                    f"slot {row}: table rows past its {len(pages)}-page "
+                    "backing are not the OOB sentinel"
+                )
+        cached = set(self.prefix.pages()) if self.prefix is not None else set()
+        for pid in range(self.n_pages):
+            expect = holders[pid] + (1 if pid in cached else 0)
+            if self._page_refs[pid] != expect:
+                raise AssertionError(
+                    f"page {pid}: refcount {self._page_refs[pid]} != "
+                    f"{holders[pid]} slot holder(s)"
+                    f"{' + 1 cache ref' if pid in cached else ''}"
+                )
+        free = self._free_pages
+        if len(set(free)) != len(free):
+            raise AssertionError("free list contains duplicates")
+        for pid in free:
+            if self._page_refs[pid] != 0:
+                raise AssertionError(
+                    f"free page {pid} has refcount {self._page_refs[pid]}"
+                )
+        zero = sum(1 for r in self._page_refs if r == 0)
+        if zero != len(free):
+            raise AssertionError(
+                f"{zero} refcount-0 pages but {len(free)} on the free list"
+            )
+        if self.stats.pages_in_use != self.n_pages - len(free):
+            raise AssertionError(
+                f"pages_in_use={self.stats.pages_in_use} != "
+                f"{self.n_pages - len(free)} resident pages"
+            )
 
     def _hydrate(
         self, prompt: List[int], pages_so_far: List[int], n_chunks: int

@@ -56,6 +56,7 @@ are kept as the stable public surface.
 
 from __future__ import annotations
 
+import os
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -333,6 +334,73 @@ class ServeEngine:
         # no longer guesses total_pages)
         self.cache_mgr.on_submit(self.scheduler.pending)
 
+    # ------------------------------------- work-preserving recovery seam
+    def checkpoint_slot(self, row: int) -> Optional[Dict]:
+        """Capture a resumable generation checkpoint for an active slot.
+
+        Called by a draining lease BEFORE it preempts the row, while the
+        slot's KV pages are still resident.  Publishes the pages covering
+        ``prompt + output[:-1]`` (everything the cache actually holds —
+        the last emitted token's KV has not been written yet) through the
+        prefix store, including the sub-page tail under an extended
+        content key, and returns a plain-dict record the caller persists
+        durably.  Returns ``None`` when there is nothing worth saving
+        (empty row, prompt still ingesting, or no tokens emitted yet —
+        full replay costs the same as a resume there)."""
+        slot = self.scheduler.slots[row]
+        req = slot.req
+        if (req is None or slot.remaining_prompt
+                or len(req.output) <= req.resume_base):
+            return None
+        # a request that is itself a resume carries resume_base pre-seeded
+        # output tokens duplicated in its extended prompt — the record
+        # always stores the ORIGINAL prompt and the FULL output, so
+        # chained resumes never double-extend
+        base = len(req.prompt) - req.resume_base
+        resident = list(req.prompt[:base]) + req.output[:-1]
+        self.cache_mgr.publish_generation(row, resident)
+        self.stats.checkpoints_published += 1
+        return {
+            "uid": req.uid,
+            "prompt": list(req.prompt[:base]),
+            "output": list(req.output),
+            "sample_stream": int(req.sample_stream),
+            "max_new_tokens": int(req.max_new_tokens),
+            "temperature": float(req.temperature),
+            "stop_token": req.stop_token,
+        }
+
+    def submit_resume(self, ckpt: Dict) -> Request:
+        """Admit a checkpointed generation for byte-identical continuation.
+
+        The resumed request re-enters through the NORMAL admission path
+        with an *extended prompt* of ``prompt + output[:-1]`` and its
+        output pre-seeded to ``output[:-1]``: the prefix stitch gets a
+        guaranteed full-chunk hit over tokens the dying worker published
+        (sub-page tail included), and the prefill-completion sample at
+        the frontier re-derives ``output[-1]`` from the same stream key
+        ``(stream, len(output)-1)`` the original emission used — so the
+        final output is token-for-token identical to an uninterrupted
+        run, and only the frontier token is ever re-decoded.  A partial
+        (or zero) store hit degrades gracefully: the un-hit extended-
+        prompt tokens are chunk-prefilled, writing the same KV bytes."""
+        output = [int(t) for t in ckpt["output"]]
+        req = Request(
+            uid=ckpt["uid"],
+            prompt=[int(t) for t in ckpt["prompt"]] + output[:-1],
+            max_new_tokens=int(ckpt["max_new_tokens"]),
+            temperature=float(ckpt["temperature"]),
+            stop_token=ckpt.get("stop_token"),
+        )
+        req.output = output[:-1]
+        req.resume_base = len(output) - 1
+        req.sample_stream = int(ckpt["sample_stream"])
+        self.scheduler.submit_resume(req)
+        self.cache_mgr.on_submit(self.scheduler.pending)
+        self.stats.checkpoint_resumes += 1
+        self.stats.tokens_recovered += len(output) - 1
+        return req
+
     # ------------------------------------------------------------- stepping
     def step(self) -> int:
         """One engine tick.
@@ -363,6 +431,8 @@ class ServeEngine:
             emitted += self._decode_tick_spec()
         else:
             emitted += self._decode_tick_fused()
+        if os.environ.get("DS_DEBUG_INVARIANTS") == "1":
+            self.cache_mgr.check_invariants()
         return emitted
 
     # -- prompt ingestion (fused chunked prefill) ---------------------------
@@ -441,6 +511,10 @@ class ServeEngine:
                 lengths[i] = n
                 temps[i] = slot.req.temperature
                 streams[i] = slot.req.sample_stream
+                # a checkpoint resume admits with pre-seeded output, so
+                # the prefill-completion sample/done mask must start at
+                # the emission count, not 0 (no-op for fresh requests)
+                steps[i] = len(slot.req.output)
                 if slot.req.stop_token is not None:
                     stops[i] = slot.req.stop_token
                 max_news[i] = slot.req.max_new_tokens
@@ -805,6 +879,9 @@ for _name in (
     "draft_tokens_proposed", "draft_tokens_accepted", "spec_tokens_emitted",
     "revocation_notices", "drain_requeued_requests", "requests_resumed",
     "lease_slices", "lease_resumes",
+    "checkpoints_published", "checkpoint_resumes", "tokens_recovered",
+    "checkpoint_fallbacks", "decode_tokens_discarded",
+    "publish_retries", "prefix_store_hash_mismatches",
 ):
     setattr(ServeEngine, _name, _stats_alias(_name))
 for _name in (

@@ -57,6 +57,8 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
+from repro.core.worker import backoff_delay
+
 _LOG = logging.getLogger(__name__)
 
 
@@ -68,6 +70,9 @@ class PrefixStore:
         self.namespace = str(namespace)
         self.key_prefix = key_prefix.rstrip("/")
         self._root = hashlib.sha256(self.namespace.encode("utf-8")).hexdigest()
+        # fetched blobs whose embedded sha256 content digest did not match
+        # (bit flips, wrong-content writes): counted misses, never hydrated
+        self.hash_mismatches = 0
 
     # ------------------------------------------------------------- keys
     def root_key(self) -> str:
@@ -85,8 +90,30 @@ class PrefixStore:
 
     # ------------------------------------------------------- page payloads
     @staticmethod
-    def pack(arrays: Dict[str, np.ndarray]) -> bytes:
+    def content_digest(page_key: str, arrays: Dict[str, np.ndarray]) -> str:
+        """sha256 over the page key and every leaf's name/dtype/shape/bytes
+        — binds a blob's *content* to the key it was published under, so a
+        bit-flipped or wrong-content object can be rejected at fetch."""
+        h = hashlib.sha256()
+        h.update(page_key.encode("ascii"))
+        for name in sorted(arrays):
+            a = np.ascontiguousarray(arrays[name])
+            h.update(name.encode("utf-8"))
+            h.update(str(a.dtype).encode("ascii"))
+            h.update(repr(a.shape).encode("ascii"))
+            h.update(a.tobytes())
+        return h.hexdigest()
+
+    @staticmethod
+    def pack(arrays: Dict[str, np.ndarray], page_key: Optional[str] = None) -> bytes:
         bio = io.BytesIO()
+        if page_key is not None:
+            arrays = dict(
+                arrays,
+                __digest__=np.array(
+                    PrefixStore.content_digest(page_key, arrays)
+                ),
+            )
         np.savez(bio, **arrays)
         return bio.getvalue()
 
@@ -100,10 +127,13 @@ class PrefixStore:
         return self.store.exists(self._object_key(page_key))
 
     def publish(self, page_key: str, arrays: Dict[str, np.ndarray]) -> None:
-        """Write one page's leaves unconditionally (atomic put).  Callers
-        probe :meth:`exists` first to skip redundant writes; a lost race
-        is a benign last-writer-wins overwrite of identical bytes."""
-        self.store.put_bytes(self._object_key(page_key), self.pack(arrays))
+        """Write one page's leaves unconditionally (atomic put), with the
+        content digest embedded.  Callers probe :meth:`exists` first to
+        skip redundant writes; a lost race is a benign last-writer-wins
+        overwrite of identical bytes."""
+        self.store.put_bytes(
+            self._object_key(page_key), self.pack(arrays, page_key=page_key)
+        )
 
     def fetch(
         self, page_key: str, like: Dict[str, np.ndarray]
@@ -130,6 +160,16 @@ class PrefixStore:
             # raises it for a PK-magic blob whose zip structure is
             # truncated/mangled (e.g. a partially swept object)
             return None  # truncated/corrupt blob: miss, not a crash
+        # content re-verification: the blob must carry a digest binding
+        # its bytes to THIS page key.  Absent or mismatched (bit flip,
+        # wrong-content overwrite, blob copied under the wrong key) is a
+        # counted miss — a poisoned page must never enter the pool
+        digest = arrays.pop("__digest__", None)
+        if digest is None or str(digest[()]) != self.content_digest(
+            page_key, arrays
+        ):
+            self.hash_mismatches += 1
+            return None
         if set(arrays) != set(like):
             return None
         for name, ref in like.items():
@@ -185,23 +225,41 @@ class AsyncPublisher:
       path, so counter values are deterministic and independent of
       worker-thread progress.
 
-    Writes are best-effort: a failed put is logged and dropped (the page
-    simply stays cold for other workers — the same contract as a lost
-    last-writer-wins race).  Callers must :meth:`flush` at natural drain
-    points (engine drain, lease end, teardown) so published pages are
-    durable before the process exits or counters are compared across
-    engines.  The worker thread is daemonized and started lazily; after
-    :meth:`close` the publisher can be reused (a new submit restarts the
-    worker)."""
+    Writes are retried: a failed put backs off (capped exponential,
+    deterministically jittered by the page's content key — the same
+    ``backoff_delay`` discipline the task worker uses for queue
+    redelivery) and is re-attempted in place up to ``max_attempts``
+    times before being dropped (the page simply stays cold for other
+    workers — the same contract as a lost last-writer-wins race).
+    ``retries`` counts re-attempts that were needed; ``errors`` counts
+    pages dropped after the final attempt.  Callers must :meth:`flush`
+    at natural drain points (engine drain, lease end, teardown) so
+    published pages are durable before the process exits or counters
+    are compared across engines.  The worker thread is daemonized and
+    started lazily; after :meth:`close` the publisher can be reused (a
+    new submit restarts the worker)."""
 
     _STOP = object()
 
-    def __init__(self, store: PrefixStore):
+    def __init__(
+        self,
+        store: PrefixStore,
+        *,
+        max_attempts: int = 4,
+        retry_base: float = 0.02,
+        retry_cap: float = 0.5,
+    ):
+        if max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
         self.store = store
+        self.max_attempts = int(max_attempts)
+        self.retry_base = float(retry_base)
+        self.retry_cap = float(retry_cap)
         self._q: "queue.Queue" = queue.Queue()
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self.errors = 0
+        self.retries = 0
 
     def submit(self, page_key: str, arrays: Dict[str, np.ndarray]) -> None:
         """Enqueue one page write (arrays must already be host-resident
@@ -221,12 +279,35 @@ class AsyncPublisher:
                 if item is self._STOP:
                     return
                 page_key, arrays = item
-                self.store.publish(page_key, arrays)
+                self._publish_with_retry(page_key, arrays)
             except Exception:  # noqa: BLE001 - best-effort, never kill the worker
                 self.errors += 1
                 _LOG.exception("async prefix-store publish failed (dropped)")
             finally:
                 self._q.task_done()
+
+    def _publish_with_retry(
+        self, page_key: str, arrays: Dict[str, np.ndarray]
+    ) -> None:
+        for attempt in range(1, self.max_attempts + 1):
+            try:
+                self.store.publish(page_key, arrays)
+                return
+            except Exception:  # noqa: BLE001 - transient store faults expected
+                if attempt == self.max_attempts:
+                    self.errors += 1
+                    _LOG.exception(
+                        "async prefix-store publish of %s failed after "
+                        "%d attempts (dropped)", page_key, attempt,
+                    )
+                    return
+                self.retries += 1
+                time.sleep(
+                    backoff_delay(
+                        self.retry_base, attempt,
+                        cap=self.retry_cap, key=page_key,
+                    )
+                )
 
     def flush(self) -> None:
         """Block until every submitted write has been attempted."""

@@ -92,6 +92,17 @@ class RequestScheduler:
                 r.submit_tick = self.tick
         self.pending.extend(reqs)
 
+    def submit_resume(self, req: Request) -> None:
+        """Queue a checkpoint-resumed request WITHOUT reassigning its
+        sampling stream: byte-identical continuation requires the stream
+        the original submission drew, not this worker's next id.  The
+        local stream counter still advances so later fresh submissions
+        on this scheduler cannot collide with the resumed stream."""
+        self._n_submitted = max(self._n_submitted, req.sample_stream + 1)
+        if req.submit_tick < 0:
+            req.submit_tick = self.tick
+        self.pending.insert(0, req)
+
     # ------------------------------------------------------------ admission
     def begin_tick(self) -> None:
         """Advance the tick clock and run the admission policy."""
@@ -214,16 +225,22 @@ class RequestScheduler:
         slot = self.slots[row]
         req = slot.req
         self.cache.release_slot(row)
-        emitted = len(req.output)
+        # checkpoint-resumed requests keep their pre-seeded output: those
+        # tokens live in the extended prompt and were never emitted here
+        emitted = len(req.output) - req.resume_base
         ingested = min(slot.pos, len(req.prompt)) - slot.skipped_tokens
         st = self.stats
         st.tokens_emitted -= emitted
         st.prompt_tokens_ingested -= ingested
         st.tokens_discarded += emitted + ingested
+        # the decode-work subset separately: this is what a generation
+        # checkpoint saves a resume from re-deriving (minus the frontier
+        # token), so recovery efficiency = recovered / discarded
+        st.decode_tokens_discarded += emitted
         st.prefix_hit_tokens -= slot.hit_tokens
         st.prefix_hit_tokens_partial -= slot.hit_tokens_partial
         st.prompt_tokens_skipped -= slot.skipped_tokens
-        req.output = []
+        del req.output[req.resume_base:]
         req.done = False
         req.admit_tick = -1
         req.first_token_tick = -1

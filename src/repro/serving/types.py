@@ -42,6 +42,12 @@ class Request:
     # per-request sampling stream id (assigned at submit; scheduling- and
     # slot-independent so fused and grouped modes draw identical samples)
     sample_stream: int = field(default=0, compare=False, repr=False)
+    # checkpoint-resume bookkeeping: number of leading output tokens that
+    # were pre-seeded from a generation checkpoint (they are ALSO the
+    # tail of the extended prompt).  Preemption rollback keeps them (they
+    # were never emitted on this worker), and the original prompt is
+    # recoverable as prompt[:len(prompt) - resume_base]
+    resume_base: int = field(default=0, compare=False, repr=False)
     # scheduler timing, in engine ticks (compare-excluded: two requests
     # with identical content are interchangeable to the batch).  -1 =
     # not yet reached.  queue wait = admit - submit; time-to-first-token
@@ -141,6 +147,24 @@ class EngineStats:
     requests_resumed: int = 0
     lease_slices: int = 0
     lease_resumes: int = 0
+    # [L] work-preserving recovery: generation checkpoints written at
+    # drain (durable before the requeue ack); requests admitted FROM a
+    # checkpoint on a surviving/replacement worker; already-emitted
+    # tokens those resumes did not have to re-decode; checkpoints that
+    # failed validation (missing/corrupt/hash-mismatch/prompt-mismatch)
+    # and fell back down the ladder to prefix-hit or full replay.
+    checkpoints_published: int = 0
+    checkpoint_resumes: int = 0
+    tokens_recovered: int = 0
+    checkpoint_fallbacks: int = 0
+    # [S] emitted tokens thrown away by preemption/drain (the subset of
+    # tokens_discarded that was *decode* work — what checkpoints save)
+    decode_tokens_discarded: int = 0
+    # [C] store-path hardening: async publications that needed a retry
+    # before landing, and fetched blobs rejected by the sha256 content
+    # re-verification (counted as misses, never hydrated)
+    publish_retries: int = 0
+    prefix_store_hash_mismatches: int = 0
 
     def snapshot(self) -> Dict[str, int]:
         """Every public counter as a plain dict (RESULTS.json payload),

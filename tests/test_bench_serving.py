@@ -103,6 +103,27 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     assert (churn["autoscaled"]["p99_ttft_s"]
             < churn["static"]["p99_ttft_s"])
     assert report["elastic_churn"]["p99_ttft_reduction"] > 1.0
+    # recovery_drill: all three fleets survive revocations + flaky
+    # storage/queue windows losing nothing and diverging nowhere (rc=0
+    # above gates the hard failures); the checkpointing fleet resumes
+    # generations mid-decode instead of replaying them, and the
+    # sabotaged fleet walks the fallback ladder to full replay
+    rec = report["recovery_drill"]["engines"]
+    for leg in ("replay", "checkpoint", "sabotage"):
+        eng = rec[leg]
+        assert eng["lost_requests"] == 0
+        assert eng["byte_identical"] is True
+        assert eng["revocations_injected"] >= 2
+        assert eng["storage_faults"] > 0  # flaky windows actually fired
+        assert eng["queue_faults"] > 0
+    assert rec["replay"]["checkpoints_published"] == 0
+    assert rec["replay"]["tokens_redecoded"] > 0
+    assert rec["checkpoint"]["checkpoints_published"] > 0
+    assert rec["checkpoint"]["checkpoint_resumes"] > 0
+    assert rec["checkpoint"]["tokens_recovered"] > 0
+    assert rec["sabotage"]["checkpoint_fallbacks"] > 0
+    assert rec["sabotage"]["checkpoint_resumes"] == 0
+    assert report["recovery_drill"]["redecode_reduction"] >= 3.0
     # the freshly-generated report must satisfy the published schema,
     # and every scenario block must be gated by this test file
     assert check_bench.check_report(report) == []

@@ -4,6 +4,10 @@ revocation schedule => byte-identical outputs and counters), dead-letter
 redrive under churn, placement/deregistration regressions, and the
 worker's capped-exponential retry backoff."""
 
+import os
+
+os.environ.setdefault("DS_DEBUG_INVARIANTS", "1")
+
 import jax  # noqa: F401  (initialize the platform before model builds)
 import numpy as np
 
@@ -72,16 +76,23 @@ def _reference_outputs(job, prompts, max_new):
 
 
 def _aggregate_counters(store, out):
-    """Sum engine counters over every lease segment under ``out``: live
-    workers' RESULTS-*.json plus drained segments under leases/ (noop
-    permit summaries carry no counters and contribute zero)."""
-    totals = {k: 0 for k in COUNTER_KEYS}
+    """Sum engine counters over every worker's segment summary under
+    ``out``.  Both records a worker leaves are *cumulative* for that
+    worker — the slice/drain record under leases/ and the final
+    RESULTS-*.json — so exactly one per worker is summed, with the final
+    summary superseding the slice record (noop permit summaries carry no
+    counters and contribute zero)."""
+    finals, slices = {}, {}
     for info in store.list(f"{out}/"):
         if not info.key.endswith(".json"):
             continue
-        if "/RESULTS-" not in info.key and "/leases/" not in info.key:
-            continue
-        snap = store.get_json(info.key)
+        base = info.key.rsplit("/", 1)[-1][: -len(".json")]
+        if "/leases/" in info.key:
+            slices[base] = store.get_json(info.key)
+        elif "/RESULTS-" in info.key:
+            finals[base.split("RESULTS-", 1)[-1]] = store.get_json(info.key)
+    totals = {k: 0 for k in COUNTER_KEYS}
+    for snap in {**slices, **finals}.values():
         for k in COUNTER_KEYS:
             totals[k] += int(snap.get(k, 0))
     return totals

@@ -3,6 +3,10 @@
 ``SimRunner`` (submit -> stream -> per-request ack -> teardown sweep),
 and a two-worker cross-host prefix hit through the ObjectStore."""
 
+import os
+
+os.environ.setdefault("DS_DEBUG_INVARIANTS", "1")
+
 import jax
 
 import repro.launch.serve  # noqa: F401  (registers distributed-serve)

@@ -4,6 +4,10 @@ randomized interleaved admission, completion, and preemption (seeded
 (drain refill, prefill token budget), latency accounting, and the
 cross-host prefix store (publish on one engine, hydrate on another)."""
 
+import os
+
+os.environ.setdefault("DS_DEBUG_INVARIANTS", "1")
+
 import random
 
 import jax
