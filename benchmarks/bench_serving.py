@@ -63,6 +63,20 @@ lower mean time-to-first-token.  Every scenario additionally records
 queue-wait and TTFT percentiles in engine ticks (deterministic on any
 host, unlike wall-clock).
 
+The disaggregation scenario runs the same mixed long-prompt /
+long-generation workload through two simulated fleets at equal total
+hardware (two machines each): a monolithic fleet of unified workers and
+a role-split fleet of one prefill worker (chunk-prefills, publishes KV
+chains to the prefix store, enqueues sealed handoff records) plus one
+decode worker (hydrates chains on demand, decodes every tick).  Both
+legs must be byte-identical to a direct-engine oracle with zero lost
+requests; every request must travel the handoff path (published ==
+admitted == n, zero fallbacks, zero seal rejects); the prefill pool
+must never decode; and the decode pool's p99 TTFT (engine ticks from
+admission to first token) and tokens-per-engine-tick must strictly beat
+the monolith — all counter-derived and gated in smoke.  The >= 1.3x
+TTFT-reduction margin runs full-mode only.
+
 Reports tokens/sec and dispatches/token per engine to
 ``BENCH_serving.json``::
 
@@ -212,6 +226,31 @@ def churn_request_bodies(n_requests: int, max_new: int, *, prefix_len: int,
          "max_new_tokens": max_new}
         for i in range(n_requests)
     ]
+
+
+def disagg_request_bodies(n_requests: int, *, prefix_len: int, long_tail: int,
+                          short_tail: int, long_new: int, short_new: int,
+                          seed: int = 31):
+    """Queue message bodies for the disaggregation drill: a shared
+    page-sized system prefix, then an alternating mix of long-prompt /
+    short-generation and short-prompt / long-generation requests — the
+    workload shape where interleaved chunked prefill steals the most
+    decode ticks from a monolithic worker."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, 200, size=prefix_len)]
+    bodies = []
+    for i in range(n_requests):
+        tail_len, max_new = ((long_tail, short_new) if i % 2 == 0
+                             else (short_tail, long_new))
+        bodies.append({
+            "uid": f"g{i}",
+            "prompt": prefix + [int(t) for t in rng.integers(1, 200,
+                                                             size=tail_len)],
+            "max_new_tokens": max_new,
+        })
+    return bodies
 
 
 # lease robustness counters aggregated over every segment summary a churn
@@ -412,6 +451,184 @@ def run_churn_fleet(*, label: str, autoscale: str, max_fleet: int, bodies,
         "outputs": {uid: r["completion"] for uid, r in records.items()},
     }
     rq.close()
+    reset_serve_state()
+    return result
+
+
+# per-role counters aggregated over a disaggregated fleet's segment
+# summaries, keyed by each role pool's output prefix
+_DISAGG_COUNTERS = (
+    "ticks", "tokens_emitted", "prompt_tokens_ingested",
+    "prompt_tokens_skipped", "decode_dispatches", "prefill_dispatches",
+    "handoffs_published", "handoffs_admitted",
+    "handoff_fallbacks", "handoff_seal_rejects",
+    "prefix_store_pages_hydrated", "prefix_store_pages_published",
+    "hydration_fetch_ops", "prefix_store_bytes_fetched",
+    "publish_dedup_hits",
+)
+
+
+def run_disagg_fleet(*, label: str, split: bool, bodies, serve_job: dict,
+                     arrivals: dict, workdir: str,
+                     tick_seconds: float = 30.0,
+                     max_ticks: int = 600) -> dict:
+    """One simulated serving fleet over the disaggregation workload, at
+    fixed hardware (two machines, autoscaling off).  ``split=False``
+    runs the monolithic baseline: two unified permits draining one
+    request queue.  ``split=True`` runs the same two machines role-split
+    — one prefill permit that chunk-prefills prompts, publishes their KV
+    chains to the prefix store and enqueues sealed handoff records, and
+    one decode permit that hydrates those chains on demand and decodes.
+    All latency is virtual-clock, and the serving-side metrics (TTFT in
+    engine ticks, tokens per engine tick) are counter-derived, so every
+    number is deterministic on any host."""
+    from repro.core import (
+        DSConfig, DSRuntime, FleetFile, JobFile, SimRunner, VirtualClock,
+    )
+    from repro.core.queue import DurableQueue
+    from repro.launch.serve import reset_serve_state
+    from repro.serving.types import percentiles
+    import repro.launch.serve  # noqa: F401  (registers distributed-serve)
+    import repro.launch.train  # noqa: F401
+
+    reset_serve_state()
+    clk = VirtualClock()
+    cfg = DSConfig(
+        app_name=f"Disagg{label.capitalize()}",
+        payload="distributed-serve",
+        cluster_machines=2,
+        tasks_per_machine=1,
+        machine_type=["sim.large"],
+        machine_price=1.0,
+        # one task fills a sim.large: both legs get exactly two workers
+        # on two machines, so the comparison is at equal total hardware
+        cpu_shares=8192,
+        memory_mb=16384,
+        sqs_message_visibility=240.0,
+        check_if_done=False,
+        idle_alarm_seconds=100_000.0,
+        monitor_poll_seconds=tick_seconds,
+        autoscale="off",
+        min_workers=2,
+        max_workers=2,
+    )
+    rt = DSRuntime(cfg, store_root=os.path.join(workdir, f"store_{label}"),
+                   clock=clk)
+    rt.setup()
+    visibility = float(serve_job.get("request_visibility", 240.0))
+    max_rc = int(serve_job.get("request_max_receive_count", 6))
+    rq_path = os.path.join(workdir, f"requests_{label}.sqlite")
+    rq = DurableQueue(rq_path, default_visibility=visibility,
+                      max_receive_count=max_rc, clock=clk)
+    n = len(bodies)
+    if split:
+        dq_path = os.path.join(workdir, f"decode_{label}.sqlite")
+        dq = DurableQueue(dq_path, default_visibility=visibility,
+                          max_receive_count=max_rc, clock=clk)
+        # distinct per-role output prefixes keep each pool's RESULTS-*
+        # and leases/* segments separately aggregatable
+        groups = [
+            {"worker_role": "prefill", "request_queue": rq_path,
+             "decode_queue": dq_path, "expected_requests": n,
+             "output_prefix": "serve/dpre"},
+            {"worker_role": "decode", "request_queue": dq_path,
+             "expected_requests": n, "output_prefix": "serve/ddec"},
+        ]
+        outs = {"prefill": "serve/dpre", "decode": "serve/ddec"}
+        serving_role = "decode"
+        req_prefix = "serve/ddec/requests/"
+    else:
+        dq = None
+        groups = [
+            {"request_queue": rq_path, "expected_requests": n,
+             "output_prefix": "serve/mono"}
+            for _ in range(2)
+        ]
+        outs = {"unified": "serve/mono"}
+        serving_role = "unified"
+        req_prefix = "serve/mono/requests/"
+    rt.submit_job(JobFile(shared=dict(serve_job), groups=groups))
+    rt.start_cluster(FleetFile(startup_seconds=tick_seconds, market_seed=7))
+    submitted_at = {}
+
+    def on_tick(t):
+        for body in arrivals.get(t, ()):
+            submitted_at[body["uid"]] = clk.now()
+            rq.send(dict(body, submitted_at=clk.now()))
+
+    runner = SimRunner(rt, tick_seconds=tick_seconds, on_tick=on_tick)
+    summary = runner.run(max_ticks=max_ticks)
+    records = {
+        info.key[len(req_prefix):-len(".json")]: rt.store.get_json(info.key)
+        for info in rt.store.list(req_prefix)
+        if info.key.endswith(".json")
+    }
+    # one cumulative record per worker per role pool (finals supersede
+    # that worker's last lease slice, same as the churn aggregation)
+    roles = {}
+    for role, out in outs.items():
+        finals, slices = {}, {}
+        for seg_prefix in (f"{out}/RESULTS-", f"{out}/leases/"):
+            for info in rt.store.list(seg_prefix):
+                if not info.key.endswith(".json"):
+                    continue
+                base = info.key.rsplit("/", 1)[-1][:-len(".json")]
+                if "/leases/" in info.key:
+                    slices[base] = rt.store.get_json(info.key)
+                else:
+                    finals[base.split("RESULTS-", 1)[-1]] = (
+                        rt.store.get_json(info.key))
+        agg = {k: 0 for k in _DISAGG_COUNTERS}
+        ttft = 0.0
+        for seg in {**slices, **finals}.values():
+            for k in _DISAGG_COUNTERS:
+                agg[k] += int(seg.get(k, 0))
+            t = seg.get("timing", {}).get("ttft_ticks", {})
+            ttft = max(ttft, float(t.get("p99", 0.0)))
+        # fleet-level serving latency: the worst worker's p99 TTFT, in
+        # engine ticks from admission to first emitted token
+        agg["ttft_ticks_p99"] = ttft
+        agg["tokens_per_tick"] = round(
+            agg["tokens_emitted"] / max(agg["ticks"], 1), 4)
+        roles[role] = agg
+    serving = roles[serving_role]
+    turnarounds = [rec["done_at"] - submitted_at[uid]
+                   for uid, rec in records.items() if uid in submitted_at]
+    sim_s = summary.wall_time
+    tokens = sum(len(r["completion"]) for r in records.values())
+    dead = rq.counts()["dead"] + (dq.counts()["dead"] if dq else 0)
+    result = {
+        "sim_seconds": round(sim_s, 1),
+        "tokens_per_sim_s": round(tokens / max(sim_s, 1e-9), 4),
+        "p99_turnaround_s": percentiles(turnarounds)["p99"],
+        "lost_requests": n - len(records),
+        "dead_letters": dead,
+        "workers_peak": max(
+            (r.running_instances for r in runner.monitor.history), default=0),
+        "ticks": summary.ticks,
+        # serving-side (decode pool on the split leg, the whole fleet on
+        # the monolith): what the role split is supposed to improve
+        "ttft_ticks_p99": serving["ttft_ticks_p99"],
+        "tokens_per_tick": serving["tokens_per_tick"],
+        "prompt_tokens_ingested_serving_side": serving["prompt_tokens_ingested"],
+        "prefix_store_pages_hydrated": serving["prefix_store_pages_hydrated"],
+        "hydration_fetch_ops": serving["hydration_fetch_ops"],
+        "prefix_store_bytes_fetched": serving["prefix_store_bytes_fetched"],
+        "handoffs_admitted": serving["handoffs_admitted"],
+        "handoff_fallbacks": serving["handoff_fallbacks"],
+        "handoff_seal_rejects": serving["handoff_seal_rejects"],
+        # handoffs are published by the prefill pool, dedup hits by
+        # whichever pool published — sum across roles
+        "handoffs_published": sum(r["handoffs_published"]
+                                  for r in roles.values()),
+        "publish_dedup_hits": sum(r["publish_dedup_hits"]
+                                  for r in roles.values()),
+        "roles": roles,
+        "outputs": {uid: r["completion"] for uid, r in records.items()},
+    }
+    rq.close()
+    if dq is not None:
+        dq.close()
     reset_serve_state()
     return result
 
@@ -978,6 +1195,92 @@ def main(argv=None) -> int:
                     f"identical={r['byte_identical']}"
                 )
 
+    # ------------------------------------ disaggregated prefill/decode
+    # monolithic vs role-split serving at equal total hardware (two
+    # machines each): prefill workers chunk-prefill and publish KV
+    # chains + sealed handoff records, decode workers hydrate on demand
+    # and spend every engine tick decoding.  Byte identity against the
+    # undisturbed single-engine oracle is the hard gate; the payoff is
+    # decode-side TTFT and tokens-per-tick beating the monolith, whose
+    # interleaved chunked prefill steals decode ticks.
+    disagg_results = {}
+    disagg_scenario = {}
+    if model.supports_paged_cache:
+        import tempfile
+
+        from repro.serving.engine import Request, ServeEngine
+
+        dg_requests = 6 if args.smoke else 12
+        dg_long_new, dg_short_new = 16, 6
+        dg_long_tail, dg_short_tail = 24, 4
+        dg_bodies = disagg_request_bodies(
+            dg_requests, prefix_len=page_size,
+            long_tail=dg_long_tail, short_tail=dg_short_tail,
+            long_new=dg_long_new, short_new=dg_short_new,
+        )
+        dg_job = {
+            "arch": args.arch, "arch_overrides": "reduced",
+            "max_len": 64, "max_batch": 2,
+            "prefill_chunk": 8, "cache_mode": "paged",
+            "page_size": page_size, "prefix_cache": True,
+            "prefix_store": True,
+            # one chunk per engine tick: without the per-tick ingest cap
+            # a whole prompt lands in a single step and prefill never
+            # contends with decode, which is exactly the interference
+            # the role split exists to remove (a decode worker's
+            # hydrated admissions ingest only the one-token frontier)
+            "prefill_token_budget": 8,
+            "stream_slice_ticks": 4, "stream_idle_polls": 60,
+            "request_visibility": 240.0, "request_max_receive_count": 6,
+        }
+        # paced arrivals (one per tick): the admission backlog stays
+        # shallow, so TTFT measures prefill latency — the thing the role
+        # split changes — instead of burst queueing, which is identical
+        # for both legs
+        dg_arrivals = {2 + i: [b] for i, b in enumerate(dg_bodies)}
+        disagg_scenario = {
+            "n_requests": dg_requests,
+            "long_max_new_tokens": dg_long_new,
+            "short_max_new_tokens": dg_short_new,
+            "long_tail": dg_long_tail, "short_tail": dg_short_tail,
+            "max_batch": 2, "prefill_chunk": 8, "page_size": page_size,
+            "prefill_token_budget": 8,
+            "prefix_len": page_size, "stream_slice_ticks": 4,
+            "tick_seconds": 30.0, "machines_per_leg": 2,
+            "arrivals_by_tick": {str(k): len(v)
+                                 for k, v in dg_arrivals.items()},
+        }
+        # undisturbed oracle: one direct unified engine (greedy bodies,
+        # so output is scheduling- and fleet-topology-invariant)
+        dg_oracle_eng = ServeEngine(model, params, max_batch=2, max_len=64,
+                                    prefill_chunk=8)
+        dg_oracle_eng.submit([
+            Request(uid=b["uid"], prompt=list(b["prompt"]),
+                    max_new_tokens=b["max_new_tokens"])
+            for b in dg_bodies
+        ])
+        dg_oracle_eng.run_to_completion()
+        dg_oracle = {r.uid: list(r.output) for r in dg_oracle_eng.finished}
+        with tempfile.TemporaryDirectory() as dg_dir:
+            for name, split_flag in (("monolith", False), ("split", True)):
+                r = run_disagg_fleet(
+                    label=name, split=split_flag, bodies=dg_bodies,
+                    serve_job=dg_job, arrivals=dg_arrivals, workdir=dg_dir,
+                )
+                r["byte_identical"] = r["outputs"] == dg_oracle
+                disagg_results[name] = r
+                print(
+                    f"[bench_serving] disagg/{name:8s} "
+                    f"ttft_p99={r['ttft_ticks_p99']:5.1f} ticks "
+                    f"tokens/tick={r['tokens_per_tick']:.3f} "
+                    f"lost={r['lost_requests']} "
+                    f"handoffs={r['handoffs_published']}/"
+                    f"{r['handoffs_admitted']} "
+                    f"hydrated={r['prefix_store_pages_hydrated']} "
+                    f"fallbacks={r['handoff_fallbacks']} "
+                    f"identical={r['byte_identical']}"
+                )
+
     report = {
         "arch": args.arch,
         "smoke": args.smoke,
@@ -1067,6 +1370,23 @@ def main(argv=None) -> int:
                 2,
             ),
         }
+    if disagg_results:
+        dg_mono = disagg_results["monolith"]
+        dg_split = disagg_results["split"]
+        report["disaggregation"] = {
+            "scenario": disagg_scenario,
+            "engines": disagg_results,
+            # decode-side admission-to-first-token, vs the monolith whose
+            # chunked prefill interleaves into the same engine ticks
+            "decode_ttft_p99_reduction": round(
+                dg_mono["ttft_ticks_p99"]
+                / max(dg_split["ttft_ticks_p99"], 1e-9), 2
+            ),
+            "decode_tokens_per_tick_vs_monolith": round(
+                dg_split["tokens_per_tick"]
+                / max(dg_mono["tokens_per_tick"], 1e-9), 3
+            ),
+        }
     if midpage_results:
         mp_page = midpage_results["paged_prefix_page"]
         mp_tok = midpage_results["paged_prefix_token"]
@@ -1088,7 +1408,8 @@ def main(argv=None) -> int:
                           ("spec/", spec_results),
                           ("staggered/", staggered_results),
                           ("churn/", churn_results),
-                          ("recovery/", recovery_results)):
+                          ("recovery/", recovery_results),
+                          ("disagg/", disagg_results)):
         for name, r in group.items():
             outputs[prefix + name] = r.pop("outputs")
     with open(args.out, "w") as f:
@@ -1116,6 +1437,9 @@ def main(argv=None) -> int:
           + (f", recovery re-decode reduction "
              f"{report['recovery_drill']['redecode_reduction']}x"
              if recovery_results else "")
+          + (f", disagg decode TTFT reduction "
+             f"{report['disaggregation']['decode_ttft_p99_reduction']}x"
+             if disagg_results else "")
           + ")")
 
     # the whole point of the fused engine: strictly fewer dispatches/token
@@ -1320,6 +1644,76 @@ def main(argv=None) -> int:
                   "walk the checkpoint fallback ladder "
                   f"(fallbacks={rs['checkpoint_fallbacks']}, "
                   f"resumes={rs['checkpoint_resumes']})")
+            return 1
+    if disagg_results:
+        dg_mono = disagg_results["monolith"]
+        dg_split = disagg_results["split"]
+        for name in ("monolith", "split"):
+            r = disagg_results[name]
+            # the hard gates: a fleet topology change must lose NOTHING
+            # and change NOTHING, and every queue must drain clean
+            if r["lost_requests"] != 0 or not r["byte_identical"]:
+                print(f"[bench_serving] REGRESSION: disagg/{name} lost "
+                      f"{r['lost_requests']} request(s) or diverged from "
+                      "the undisturbed run")
+                return 1
+            if r["dead_letters"] != 0:
+                print(f"[bench_serving] REGRESSION: disagg/{name} left "
+                      f"{r['dead_letters']} dead-lettered message(s)")
+                return 1
+        # every request must travel the storage-mediated handoff path —
+        # published once, admitted once, no replay fallbacks needed on a
+        # healthy store, no seal rejects
+        dg_n = disagg_scenario["n_requests"]
+        if not (dg_split["handoffs_published"] == dg_split["handoffs_admitted"]
+                == dg_n):
+            print(f"[bench_serving] REGRESSION: disagg/split handoffs "
+                  f"published={dg_split['handoffs_published']} "
+                  f"admitted={dg_split['handoffs_admitted']} != {dg_n}")
+            return 1
+        if dg_split["handoff_fallbacks"] != 0 or dg_split["handoff_seal_rejects"] != 0:
+            print(f"[bench_serving] REGRESSION: disagg/split walked the "
+                  f"replay ladder on a healthy store "
+                  f"(fallbacks={dg_split['handoff_fallbacks']}, "
+                  f"seal_rejects={dg_split['handoff_seal_rejects']})")
+            return 1
+        if dg_mono["handoffs_published"] != 0:
+            print("[bench_serving] REGRESSION: disagg/monolith published "
+                  "handoff records from unified workers")
+            return 1
+        # role purity: the prefill pool never decodes a token
+        dg_pre = dg_split["roles"]["prefill"]
+        if dg_pre["tokens_emitted"] != 0 or dg_pre["decode_dispatches"] != 0:
+            print(f"[bench_serving] REGRESSION: disagg prefill pool decoded "
+                  f"(tokens={dg_pre['tokens_emitted']}, "
+                  f"decode_dispatches={dg_pre['decode_dispatches']})")
+            return 1
+        # the decode pool must really hydrate its KV from the store, not
+        # re-prefill the prompts the prefill pool already processed
+        if (dg_split["prefix_store_pages_hydrated"] <= 0
+                or dg_split["hydration_fetch_ops"] <= 0
+                or dg_split["prefix_store_bytes_fetched"] <= 0):
+            print("[bench_serving] REGRESSION: disagg decode pool never "
+                  "hydrated from the prefix store")
+            return 1
+        # the payoff, both counter-derived and deterministic: decode-side
+        # p99 TTFT and tokens-per-tick strictly beat the monolith
+        if dg_split["ttft_ticks_p99"] >= dg_mono["ttft_ticks_p99"]:
+            print(f"[bench_serving] REGRESSION: disagg decode p99 TTFT "
+                  f"{dg_split['ttft_ticks_p99']:.1f} ticks not below "
+                  f"monolith {dg_mono['ttft_ticks_p99']:.1f}")
+            return 1
+        if dg_split["tokens_per_tick"] <= dg_mono["tokens_per_tick"]:
+            print(f"[bench_serving] REGRESSION: disagg decode tokens/tick "
+                  f"{dg_split['tokens_per_tick']:.3f} not above monolith "
+                  f"{dg_mono['tokens_per_tick']:.3f}")
+            return 1
+        # margin gate only outside smoke (the full workload is big enough
+        # to demand a real win, not a tie-breaker)
+        dg_ratio = report["disaggregation"]["decode_ttft_p99_reduction"]
+        if not args.smoke and dg_ratio < 1.3:
+            print(f"[bench_serving] REGRESSION: disagg decode TTFT reduction "
+                  f"{dg_ratio}x < 1.3x")
             return 1
     return 0
 

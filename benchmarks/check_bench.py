@@ -61,6 +61,20 @@ RECOVERY_KEYS = CHURN_KEYS + (
     "publish_retries", "prefix_store_hash_mismatches",
     "storage_faults", "queue_faults",
 )
+# the disaggregation drill reports per-leg serving-side latency and
+# throughput (engine-tick derived, deterministic), the storage-mediated
+# handoff books, and the decode pool's hydration accounting
+DISAGG_KEYS = (
+    "sim_seconds", "tokens_per_sim_s", "p99_turnaround_s",
+    "lost_requests", "dead_letters", "workers_peak", "ticks",
+    "ttft_ticks_p99", "tokens_per_tick",
+    "prompt_tokens_ingested_serving_side",
+    "prefix_store_pages_hydrated", "hydration_fetch_ops",
+    "prefix_store_bytes_fetched",
+    "handoffs_published", "handoffs_admitted",
+    "handoff_fallbacks", "handoff_seal_rejects",
+    "publish_dedup_hits", "roles", "byte_identical",
+)
 
 # scenario block -> (path to its engines dict, required engine names,
 # per-engine required keys, block-level derived metrics)
@@ -87,6 +101,10 @@ SCENARIOS = {
     "recovery_drill": (("recovery_drill", "engines"),
                        ("replay", "checkpoint", "sabotage"), RECOVERY_KEYS,
                        ("redecode_reduction",)),
+    "disaggregation": (("disaggregation", "engines"),
+                       ("monolith", "split"), DISAGG_KEYS,
+                       ("decode_ttft_p99_reduction",
+                        "decode_tokens_per_tick_vs_monolith")),
 }
 
 

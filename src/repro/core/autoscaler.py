@@ -19,6 +19,14 @@ Signals
   exceeds ``autoscale_target_p99_ttft`` the fleet scales up regardless
   of queue depth.
 
+**Role-split fleets**: when fresh reports carry ``role`` tags of
+``prefill``/``decode`` (a disaggregated fleet), the policy sizes the
+two pools independently — prefill off its request-queue backlog,
+decode off the decode-queue backlog, active-slot pressure and (under
+``slo``) decode-side p99 TTFT — and sums them into the single fleet
+target.  Without role tags the legacy single-pool policy runs
+unchanged.
+
 Anti-flap machinery, all explicit knobs on :class:`~.config.DSConfig`:
 hysteresis (inside the band ``(target/2, target]`` the fleet holds
 rather than shrinking), separate scale-up / scale-down cooldowns (a
@@ -114,29 +122,34 @@ class Autoscaler:
             for p in (self.board.fresh(now, max_age) if self.board else [])
             if p.get("kind") == "serve"
         ]
-        if reports:
-            backlog = max(int(p.get("backlog", 0)) for p in reports)
-            signal = "reported"
+        if any(p.get("role") in ("prefill", "decode") for p in reports):
+            # disaggregated fleet: per-role pools, summed into the one
+            # fleet target (see _split_desired)
+            desired, reason = self._split_desired(reports, current)
         else:
-            c = self.queue.counts()
-            backlog = c["visible"] + c["in_flight"]
-            signal = "job-queue"
-        desired = math.ceil(backlog / max(1, cfg.autoscale_queue_per_worker))
-        reason = f"{signal} backlog={backlog}"
+            if reports:
+                backlog = max(int(p.get("backlog", 0)) for p in reports)
+                signal = "reported"
+            else:
+                c = self.queue.counts()
+                backlog = c["visible"] + c["in_flight"]
+                signal = "job-queue"
+            desired = math.ceil(backlog / max(1, cfg.autoscale_queue_per_worker))
+            reason = f"{signal} backlog={backlog}"
 
-        if cfg.autoscale == "slo" and reports:
-            p99 = max(float(p.get("p99_ttft", 0.0)) for p in reports)
-            target = cfg.autoscale_target_p99_ttft
-            if p99 > target:
-                # SLO breach: step up as fast as the bound allows, even
-                # if the queue-depth policy thinks capacity suffices
-                desired = max(desired, current + cfg.autoscale_max_step)
-                reason = f"slo breach p99_ttft={p99:.1f}>{target:.1f}"
-            elif p99 > target / 2 and desired < current:
-                # hysteresis band: latency is within SLO but not by a
-                # 2x margin — hold rather than shrink into a breach
-                desired = current
-                reason = f"slo hold p99_ttft={p99:.1f} in ({target/2:.1f},{target:.1f}]"
+            if cfg.autoscale == "slo" and reports:
+                p99 = max(float(p.get("p99_ttft", 0.0)) for p in reports)
+                target = cfg.autoscale_target_p99_ttft
+                if p99 > target:
+                    # SLO breach: step up as fast as the bound allows, even
+                    # if the queue-depth policy thinks capacity suffices
+                    desired = max(desired, current + cfg.autoscale_max_step)
+                    reason = f"slo breach p99_ttft={p99:.1f}>{target:.1f}"
+                elif p99 > target / 2 and desired < current:
+                    # hysteresis band: latency is within SLO but not by a
+                    # 2x margin — hold rather than shrink into a breach
+                    desired = current
+                    reason = f"slo hold p99_ttft={p99:.1f} in ({target/2:.1f},{target:.1f}]"
 
         desired = max(cfg.min_workers, min(cfg.max_workers, desired))
         # per-decision step bound
@@ -173,6 +186,73 @@ class Autoscaler:
                 f"scale {current} -> {desired} ({reason})",
             )
         return decision
+
+    # ------------------------------------- disaggregated per-role pools
+    def _split_desired(self, reports: List[dict],
+                       current: int) -> Tuple[int, str]:
+        """Size a role-split fleet: two pools, one fleet target.
+
+        The prefill pool is demand-driven off the *request-queue* backlog
+        (prefill leases report it): prompts waiting to be prefilled are
+        the only signal that pool can act on.  The decode pool is sized
+        off the *decode-queue* backlog (decode leases report THEIR
+        queue) and active-slot pressure, and under ``autoscale=slo``
+        additionally steps up past any queue-depth answer when the worst
+        fresh decode p99 TTFT breaches the target — TTFT on a split
+        fleet is dominated by the decode side's admission latency.  Each
+        pool with live leases keeps a floor of one worker (a pipeline
+        with either stage empty serves nothing).  The sum feeds the
+        caller's shared clamp/step/cooldown machinery; reasons carry the
+        per-role breakdown so scale decisions stay auditable."""
+        cfg = self.cfg
+        qpw = max(1, cfg.autoscale_queue_per_worker)
+        pre = [p for p in reports if p.get("role") == "prefill"]
+        dec = [p for p in reports if p.get("role") == "decode"]
+        uni = [p for p in reports if p.get("role", "unified") == "unified"]
+
+        pre_backlog = max((int(p.get("backlog", 0)) for p in pre), default=0)
+        want_pre = math.ceil(pre_backlog / qpw)
+        if pre:
+            want_pre = max(1, want_pre)
+
+        dec_backlog = max((int(p.get("backlog", 0)) for p in dec), default=0)
+        dec_active = sum(int(p.get("active", 0)) for p in dec)
+        want_dec = max(
+            math.ceil(dec_backlog / qpw), math.ceil(dec_active / qpw)
+        )
+        if dec:
+            want_dec = max(1, want_dec)
+
+        # a mixed fleet (unified leases riding along) sizes its legacy
+        # share exactly as the non-split policy would
+        uni_backlog = max((int(p.get("backlog", 0)) for p in uni), default=0)
+        want_uni = math.ceil(uni_backlog / qpw)
+
+        desired = want_pre + want_dec + want_uni
+        reason = f"role-split prefill={want_pre} decode={want_dec}"
+        if uni:
+            reason += f" unified={want_uni}"
+
+        if cfg.autoscale == "slo" and dec:
+            p99 = max(float(p.get("p99_ttft", 0.0)) for p in dec)
+            target = cfg.autoscale_target_p99_ttft
+            if p99 > target:
+                # step the DECODE pool up by the bound from its live
+                # size; the prefill share is preserved on top
+                desired = max(
+                    desired, want_pre + len(dec) + cfg.autoscale_max_step
+                )
+                reason = (
+                    f"decode slo breach p99_ttft={p99:.1f}>{target:.1f} "
+                    f"(prefill={want_pre})"
+                )
+            elif p99 > target / 2 and desired < current:
+                desired = current
+                reason = (
+                    f"decode slo hold p99_ttft={p99:.1f} "
+                    f"in ({target/2:.1f},{target:.1f}]"
+                )
+        return desired, reason
 
     def _apply(self, desired: int) -> None:
         self.fleet.modify_target(desired)

@@ -88,6 +88,17 @@ class DSConfig:
     # output is byte-identical either way, only tokens/dispatch changes
     speculative: str = "off"
     spec_k: int = 4
+    # disaggregated serving role for distributed-serve fleets: "unified"
+    # (the monolith — every worker prefills and decodes), "prefill"
+    # (workers only ingest prompts, publish the full prompt's KV through
+    # the prefix store and enqueue a sealed handoff record onto the
+    # decode queue) or "decode" (workers lease handoff records, hydrate
+    # the published pages on demand and run pure decode ticks).  Like
+    # speculative/spec_k this is the fleet-level default operators copy
+    # into serve job templates (the job dict's "worker_role" key is what
+    # serve.py reads per job); split fleets need a "decode_queue" in the
+    # job as well.  See docs/serving.md "Disaggregated prefill/decode".
+    worker_role: str = "unified"
     # -- autoscaling ---------------------------------------------------------
     # "off" (static fleet, the paper's behaviour), "queue" (size to the
     # reported request-queue backlog) or "slo" (queue policy plus scale-up
@@ -148,6 +159,11 @@ class DSConfig:
             )
         if self.spec_k < 1:
             raise ValueError("spec_k must be >= 1")
+        if self.worker_role not in ("unified", "prefill", "decode"):
+            raise ValueError(
+                "worker_role must be unified|prefill|decode, "
+                f"got {self.worker_role!r}"
+            )
         if self.autoscale not in ("off", "queue", "slo"):
             raise ValueError(
                 f"autoscale must be off|queue|slo, got {self.autoscale!r}"

@@ -49,6 +49,16 @@ the store on, completed prompts' KV pages are content-hashed into the
 shared object store and cold workers hydrate instead of re-prefilling
 (see ``docs/serving.md``).
 
+**Disaggregated prefill/decode** (``worker_role``): ``prefill`` leases
+chunk-prefill prompts from the request queue, publish each prompt's
+full KV chain through the prefix store (chain keys pinned against the
+TTL sweep), and enqueue a sealed handoff record onto ``decode_queue``
+— they never decode a token.  ``decode`` leases claim handoff records
+(their ``request_queue`` IS the decode queue), demand-hydrate exactly
+the chained pages, and decode to completion; a record that fails its
+seal check is never admitted and marches to the DLQ.  Outputs are
+byte-identical to a ``unified`` fleet (see ``docs/serving.md``).
+
 Speculative decoding knobs: ``speculative`` (``off`` | ``ngram`` |
 ``draft``), ``spec_k`` (drafts per verify dispatch), and for ``draft``
 mode ``draft_arch`` / ``draft_arch_overrides`` / ``draft_init_seed``
@@ -100,6 +110,11 @@ def reset_serve_state() -> None:
     for st in list(_LEASE_STATES.values()):
         try:
             st.rq.close()
+        except Exception:
+            pass
+        try:
+            if st.dq is not None:
+                st.dq.close()
         except Exception:
             pass
     _LEASE_STATES.clear()
@@ -220,6 +235,7 @@ def _build_engine(job: Dict, ctx: WorkerContext) -> ServeEngine:
         cache_mode=cache_mode,
         refill_policy=str(job.get("refill_policy", "continuous")),
         prefill_token_budget=int(budget) if budget is not None else None,
+        worker_role=str(job.get("worker_role", "unified")),
         heartbeat=lambda: ctx.heartbeat(),
         **paged_kwargs,
         **spec_kwargs,
@@ -327,6 +343,79 @@ def _try_resume(engine: ServeEngine, ctx: WorkerContext, ckpt_prefix: str,
     return engine.submit_resume(ckpt)
 
 
+# --------------------------------------- disaggregated prefill/decode
+def _handoff_valid(rec) -> bool:
+    """A decode-queue message is admitted only if its content hash
+    verifies and it is shaped like a handoff: the checkpoint record
+    format with an EMPTY output (nothing decoded yet).  Unlike
+    ``_checkpoint_valid`` there is no request to cross-check against —
+    the sealed record IS the source of truth on the decode side."""
+    if not isinstance(rec, dict) or "sha" not in rec:
+        return False
+    body = {k: v for k, v in rec.items() if k != "sha"}
+    digest = hashlib.sha256(
+        json.dumps(body, sort_keys=True, separators=(",", ":")).encode("utf-8")
+    ).hexdigest()
+    if digest != rec["sha"]:
+        return False
+    try:
+        return (
+            len(list(rec["output"])) == 0
+            and len([int(t) for t in rec["prompt"]]) > 0
+            and int(rec["sample_stream"]) >= 0
+            and int(rec["max_new_tokens"]) > 0
+        )
+    except (KeyError, TypeError, ValueError):
+        return False
+
+
+def _publish_handoff(ctx: WorkerContext, st: "_LeaseState", r: Request,
+                     m) -> None:
+    """Seal and enqueue one finished prefill onto the decode queue.
+
+    Ordering is the handoff contract (durable-before-ack, extended to a
+    three-party exchange): (1) the prompt's KV chain — full pages plus
+    the sub-page tail — is flushed durable in the prefix store; (2)
+    every chain key is pinned so the TTL sweep cannot reclaim the pages
+    before a decode worker admits them; (3) the sealed record lands on
+    the decode queue; (4) the handoff marker is persisted (the prefill
+    lease's completion record — ``_served_uids`` termination and uid
+    dedup read these); (5) only then is the original request message
+    acked.  A crash between any two steps re-delivers the request and
+    the whole sequence re-runs idempotently (publishes memo-skip, the
+    duplicate decode-queue record dedups by uid on the decode side)."""
+    engine = st.engine
+    hand = _seal_checkpoint({
+        "uid": r.uid,
+        "prompt": [int(t) for t in r.prompt],
+        "output": [],
+        "sample_stream": int(r.sample_stream),
+        "max_new_tokens": int(r.max_new_tokens),
+        "temperature": float(r.temperature),
+        "stop_token": r.stop_token,
+    })
+    engine.cache_mgr.flush_store()
+    store = engine.cache_mgr.store
+    for k in engine.cache_mgr.chain_keys_for(r.prompt):
+        _with_retries(
+            lambda k=k: store.pin(k), key=f"pin/{k}", clock=ctx.clock
+        )
+    _with_retries(
+        lambda: st.dq.send(hand), key=f"handoff/{r.uid}", clock=ctx.clock
+    )
+    mark_key = f"{st.req_prefix}{r.uid}.json"
+    _with_retries(
+        lambda: ctx.store.put_json(mark_key, hand),
+        key=mark_key, clock=ctx.clock,
+    )
+    if m is not None:
+        _with_retries(
+            lambda: st.rq.delete(m), key=mark_key, clock=ctx.clock,
+        )
+        st.acked += 1
+    engine.stats.handoffs_published += 1
+
+
 @register_payload("distributed-serve")
 def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
     if job.get("request_queue"):
@@ -355,7 +444,7 @@ class _LeaseState:
     __slots__ = (
         "key", "worker_id", "out", "req_prefix", "results_key", "ctx",
         "engine", "rq", "inflight", "served", "marks", "acked", "idle",
-        "last_ext", "ckpt_prefix",
+        "last_ext", "ckpt_prefix", "role", "dq",
     )
 
     def __init__(self, key, ctx, out, req_prefix, results_key, engine, rq):
@@ -376,6 +465,10 @@ class _LeaseState:
         # generation-checkpoint prefix (None = work-preserving recovery
         # disabled for this job); set right after construction
         self.ckpt_prefix: Optional[str] = None
+        # disaggregation: the lease's role and, for prefill leases, the
+        # decode-queue handle handoffs are enqueued onto
+        self.role = "unified"
+        self.dq: Optional[DurableQueue] = None
 
 
 def _report_progress(ctx: WorkerContext, st: _LeaseState) -> None:
@@ -389,6 +482,7 @@ def _report_progress(ctx: WorkerContext, st: _LeaseState) -> None:
     )
     ctx.report_progress({
         "kind": "serve",
+        "role": st.role,
         "backlog": qc["visible"] + qc["in_flight"],
         "active": active,
         "p99_ttft": timing["ttft_ticks"]["p99"],
@@ -471,6 +565,8 @@ def _revocation_drain(ctx: WorkerContext, st: _LeaseState, wid_safe: str) -> Non
     _report_progress(ctx, st)
     _LEASE_STATES.pop(st.key, None)
     st.rq.close()
+    if st.dq is not None:
+        st.dq.close()
     ctx.log(
         f"revocation drain: requeued {requeued} in-flight requests, "
         f"flushed prefix publications, persisted segment counters"
@@ -489,7 +585,20 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
     mode — see the module docstring).
     """
     out = job.get("output_prefix", "serve/stream0")
-    req_prefix = f"{out}/requests/"
+    role = str(job.get("worker_role", "unified"))
+    if role == "prefill" and not job.get("decode_queue"):
+        raise ValueError(
+            "worker_role='prefill' requires a 'decode_queue' in the job "
+            "(where else would the sealed handoff records go?)"
+        )
+    # a prefill lease's completion records are its handoff markers: one
+    # sealed record per prompt handed off, written before the request
+    # ack.  Termination, uid dedup and resume seeding all read this
+    # prefix, so the rename re-points them wholesale; decode/unified
+    # leases keep writing plain completion records under requests/
+    req_prefix = (
+        f"{out}/handoffs/" if role == "prefill" else f"{out}/requests/"
+    )
     slice_ticks = int(job.get("stream_slice_ticks", 0))
     wid_safe = ctx.worker_id.replace("/", "~")
     # elastic leases write per-worker summaries (many workers share one
@@ -546,7 +655,21 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
         )
         st = _LeaseState(key, ctx, out, req_prefix, results_key, engine, rq)
         st.served = served
-        if job.get("generation_checkpoints", True):
+        st.role = role
+        if role == "prefill":
+            # handoffs ride the same durable-queue machinery as requests
+            # (visibility resurfacing, receive counting, the DLQ march)
+            st.dq = DurableQueue(
+                str(job["decode_queue"]),
+                default_visibility=float(job.get("request_visibility", 120.0)),
+                max_receive_count=int(job.get("request_max_receive_count", 3)),
+                clock=ctx.clock,
+            )
+        # prefill leases never resume from generation checkpoints: their
+        # rows finish with zero output (nothing to preserve), and a
+        # decode-side checkpoint under the shared prefix describes work
+        # this role must not admit
+        if job.get("generation_checkpoints", True) and role != "prefill":
             st.ckpt_prefix = f"{out}/checkpoints/"
         if served:
             # cold build joining a run with prior progress: a resume.
@@ -640,6 +763,24 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
                         # the remaining budget get decoded
                         inflight[req.uid] = m
                         continue
+                if role == "decode":
+                    # decode-queue messages ARE sealed handoff records.
+                    # One that fails its seal/consistency check is never
+                    # admitted (a decode scheduler refuses fresh prefill
+                    # work by contract): it is left in flight unacked, so
+                    # the visibility timeout resurfaces it and receive
+                    # counting marches a genuinely poisoned record to
+                    # the DLQ
+                    rec = dict(m.body)
+                    if not _handoff_valid(rec):
+                        engine.stats.handoff_seal_rejects += 1
+                        continue
+                    # carry a uid-collision rename through (the seal was
+                    # verified over the original body above)
+                    rec["uid"] = req.uid
+                    inflight[req.uid] = m
+                    engine.submit_handoff(rec)
+                    continue
                 inflight[req.uid] = m
                 engine.submit([req])
             progressed = bool(claimed)
@@ -649,6 +790,14 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
             # drain (not slice) the finished list: a long-lived lease
             # must not retain every served Request object forever
             for r in engine.scheduler.drain_finished():
+                if role == "prefill":
+                    # finished here means "prompt ingested and published",
+                    # not "completed": seal the handoff, pin its chain,
+                    # enqueue it, persist the marker, THEN ack (see
+                    # _publish_handoff for the ordering contract)
+                    _publish_handoff(ctx, st, r, inflight.pop(r.uid, None))
+                    served.add(r.uid)
+                    continue
                 rec = {
                     # a checkpoint-resumed request ran with an extended
                     # prompt; the record always carries the ORIGINAL one
@@ -723,11 +872,15 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
             engine.cache_mgr.flush_store()
         finally:
             rq.close()
+            if st.dq is not None:
+                st.dq.close()
         raise
     # completed: this holder saw the run through to its exit condition
     _LEASE_STATES.pop(key, None)
     _report_progress(ctx, st)
     rq.close()
+    if st.dq is not None:
+        st.dq.close()
     # lease end is a drain seam: background prefix-store publishes
     # must be durable before the lease's counters are reported
     engine.cache_mgr.flush_store()

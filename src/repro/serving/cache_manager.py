@@ -520,6 +520,32 @@ class KVCacheManager:
 
     # --------------------------------------------------------- prefix cache
     def stitch_prefix(self, row: int, slot: Slot) -> None:
+        """Admission-time prefix reuse (see :meth:`_stitch`).  Handoff
+        admissions (``slot.req.handoff``) run the *demand-driven*
+        hydration variant — the chain pages are expected to exist, so
+        the walk may evict unpinned cached prefixes for room — and are
+        accounted here: one ``hydration_ticks`` sample (store
+        round-trips this admission made) and a ``handoff_fallbacks``
+        count when the store could not cover the prompt down to the
+        held-back frontier token (the remainder replays through the
+        PR 8 ladder, byte-identical)."""
+        demand = (
+            bool(getattr(slot.req, "handoff", False))
+            and self.store is not None
+        )
+        if not demand:
+            self._stitch(row, slot, False)
+            return
+        ops0 = self.store.fetch_ops
+        self._stitch(row, slot, True)
+        self.stats._hydration_ticks.append(self.store.fetch_ops - ops0)
+        # a guaranteed hit leaves exactly the held-back frontier token
+        # to re-dispatch; anything longer means the store lied
+        if len(slot.remaining_prompt) > 1:
+            self.stats.handoff_fallbacks += 1
+        self._sync_store_stats()
+
+    def _stitch(self, row: int, slot: Slot, demand: bool) -> None:
         """Admission-time prefix reuse: map the longest cached prefix of
         the new request's prompt straight into its page table and skip
         prefill for those tokens.  With a cross-host store attached, a
@@ -554,7 +580,8 @@ class KVCacheManager:
         path, pnode, plen = lookup()
         if self.store is not None:
             n_chunks = min(len(prompt) // self.page_size, self.pages_per_slot)
-            if len(path) < n_chunks and self._hydrate(
+            hydrate = self._hydrate_demand if demand else self._hydrate
+            if len(path) < n_chunks and hydrate(
                 prompt, [n.page for n in path], n_chunks
             ):
                 # now extended locally (possibly exposing a new partial)
@@ -599,6 +626,23 @@ class KVCacheManager:
             self._sync_store_stats()
             if arrays is not None:
                 pid = self._take_free_page()
+                if pid is None and demand and self.prefix is not None:
+                    # demand hydration may make room; pin the matched
+                    # path with transient raw refcount bumps so the
+                    # eviction pass cannot reclaim the chain mid-stitch
+                    for n in path:
+                        self._page_refs[n.page] += 1
+                    try:
+                        evicted = self.prefix.evict(
+                            1, lambda p: self._page_refs[p]
+                        )
+                        for e in evicted:
+                            self._decref(e)
+                        self.stats.prefix_evictions += len(evicted)
+                    finally:
+                        for n in path:
+                            self._page_refs[n.page] -= 1
+                    pid = self._take_free_page()
                 if pid is not None:
                     for name, arr in arrays.items():
                         self.cache[name] = self.cache[name].at[:, pid].set(arr)
@@ -723,13 +767,18 @@ class KVCacheManager:
                 # device->host page pull is deferred behind the probe,
                 # and a concurrent publisher writing the same key is a
                 # benign last-writer-wins race over identical bytes.
-                # The pull happens HERE (the pool page may be evicted and
-                # reissued before the write lands) but the serialization
-                # + store write run on the background publisher thread —
-                # counters and the memo stay synchronous/deterministic
+                # The pull happens at submit time (the pool page may be
+                # evicted and reissued before the write lands) — passed
+                # as a thunk so a submit the publisher dedups (the key
+                # already pending in its queue) skips the device->host
+                # pull and the pack entirely.  Serialization + the store
+                # write run on the background publisher thread; counters
+                # and the memo stay synchronous/deterministic
                 if self._publisher is None:
                     self._publisher = self.store.publisher()
-                self._publisher.submit(key, self._page_arrays(pages[j]))
+                self._publisher.submit(
+                    key, lambda pid=pages[j]: self._page_arrays(pid)
+                )
                 self.stats.prefix_store_pages_published += 1
             self._published.add(key)
 
@@ -764,10 +813,61 @@ class KVCacheManager:
                 # hold-back re-dispatch overwrites the frontier position
                 if self._publisher is None:
                     self._publisher = self.store.publisher()
-                self._publisher.submit(tkey, self._page_arrays(pages[n_full]))
+                self._publisher.submit(
+                    tkey, lambda pid=pages[n_full]: self._page_arrays(pid)
+                )
                 self.stats.prefix_store_pages_published += 1
             self._published.add(tkey)
         return self.stats.prefix_store_pages_published - before
+
+    def chain_keys_for(self, tokens: List[int]) -> List[str]:
+        """Content keys covering ``tokens``: every full chunk plus, when
+        a sub-page remainder exists, its extended tail key — the exact
+        set a handoff's demand hydration will fetch.  The prefill lease
+        pins these against the TTL sweep before enqueueing a handoff."""
+        if self.store is None:
+            return []
+        n_full = len(tokens) // self.page_size
+        keys = self._chunk_keys(tokens, n_full)
+        tail = tokens[n_full * self.page_size:]
+        if tail:
+            parent = keys[-1] if n_full else self.store.root_key()
+            keys.append(self.store.child_key(parent, tail))
+        return keys
+
+    def ensure_chain_published(self, row: int, tokens: List[int]) -> List[str]:
+        """Defensively re-probe and (re)submit every chain page covering
+        ``tokens`` while row ``row`` still holds them, bypassing the
+        ``_published`` memo — the memo means "submitted", not "durable",
+        and a handoff points other workers at these exact keys.  A key
+        whose queued write has not landed yet probes as absent and is
+        resubmitted; the publisher's pending-set dedup then drops the
+        duplicate before any snapshot/pack work (``publish_dedup_hits``).
+        Returns the chain keys (full chunks + tail)."""
+        if self.store is None or self.cache_mode != "paged" or self.cache is None:
+            return []
+        ps = self.page_size
+        pages = self._slot_pages[row]
+        n_full = min(len(tokens) // ps, len(pages))
+        keys = self._chunk_keys(tokens, n_full)
+        if self._publisher is None:
+            self._publisher = self.store.publisher()
+        for j, key in enumerate(keys):
+            if not self.store.exists(key):
+                self._publisher.submit(
+                    key, lambda pid=pages[j]: self._page_arrays(pid)
+                )
+        tail = tokens[n_full * ps:]
+        if tail and n_full < len(pages):
+            parent = keys[-1] if n_full else self.store.root_key()
+            tkey = self.store.child_key(parent, tail)
+            keys.append(tkey)
+            if not self.store.exists(tkey):
+                self._publisher.submit(
+                    tkey, lambda pid=pages[n_full]: self._page_arrays(pid)
+                )
+        self._sync_store_stats()
+        return keys
 
     def _sync_store_stats(self) -> None:
         """Mirror the store/publisher-owned hardening counters into the
@@ -775,8 +875,11 @@ class KVCacheManager:
         the store path has no stats dependency)."""
         if self.store is not None:
             self.stats.prefix_store_hash_mismatches = self.store.hash_mismatches
+            self.stats.hydration_fetch_ops = self.store.fetch_ops
+            self.stats.prefix_store_bytes_fetched = self.store.bytes_fetched
         if self._publisher is not None:
             self.stats.publish_retries = self._publisher.retries
+            self.stats.publish_dedup_hits = self._publisher.dedup_hits
 
     def flush_store(self) -> None:
         """Drain the background publish queue (no-op without a store or
@@ -884,6 +987,63 @@ class KVCacheManager:
             # the allocation above IS the cache's refcount on each
             # hydrated page (insert adopts them; nothing further to
             # incref)
+            self.prefix.insert(prompt[: len(pages_so_far) * ps], pages_so_far)
+            self.stats.prefix_store_pages_hydrated += hydrated
+            self.stats.prefix_store_tokens_hydrated += hydrated * ps
+            if self.stats.pages_in_use > self.stats.peak_pages:
+                self.stats.peak_pages = self.stats.pages_in_use
+        return hydrated
+
+    def _hydrate_demand(
+        self, prompt: List[int], pages_so_far: List[int], n_chunks: int
+    ) -> int:
+        """Demand-driven variant of :meth:`_hydrate` for handoff
+        admissions: the chain pages are *expected* to exist (a prefill
+        worker just published them and pinned them against the TTL
+        sweep), so instead of stopping when the free list runs dry the
+        walk may reclaim room by evicting unpinned LRU cached prefixes —
+        never preempting (the caller is mid-admission).  Pages already
+        matched or freshly hydrated are pinned by transient raw refcount
+        bumps (the :meth:`_cow_partial` pattern) so the eviction pass
+        cannot reclaim the very chain being assembled.  Stops at the
+        first store miss — the caller's fallback ladder replays the
+        remainder, byte-identical."""
+        ps = self.page_size
+        keys = self._chunk_keys(prompt, n_chunks)
+        like = self._page_like()
+        pages_so_far = list(pages_so_far)
+        hydrated = 0
+        pinned: List[int] = []
+        try:
+            for p in pages_so_far:
+                self._page_refs[p] += 1
+                pinned.append(p)
+            for j in range(len(pages_so_far), n_chunks):
+                arrays = self.store.fetch(keys[j], like)
+                if arrays is None:
+                    break
+                self._published.add(keys[j])
+                pid = self._take_free_page()
+                if pid is None and self.prefix is not None:
+                    evicted = self.prefix.evict(
+                        1, lambda p: self._page_refs[p]
+                    )
+                    for e in evicted:
+                        self._decref(e)
+                    self.stats.prefix_evictions += len(evicted)
+                    pid = self._take_free_page()
+                if pid is None:
+                    break
+                for name, arr in arrays.items():
+                    self.cache[name] = self.cache[name].at[:, pid].set(arr)
+                pages_so_far.append(pid)
+                self._page_refs[pid] += 1
+                pinned.append(pid)
+                hydrated += 1
+        finally:
+            for p in pinned:
+                self._page_refs[p] -= 1
+        if hydrated:
             self.prefix.insert(prompt[: len(pages_so_far) * ps], pages_so_far)
             self.stats.prefix_store_pages_hydrated += hydrated
             self.stats.prefix_store_tokens_hydrated += hydrated * ps

@@ -115,6 +115,7 @@ class ServeEngine:
         prefix_store: Optional[PrefixStore] = None,
         refill_policy: str = "continuous",
         prefill_token_budget: Optional[int] = None,
+        worker_role: str = "unified",
         speculative: str = "off",
         spec_k: int = 4,
         draft_model: Optional[Model] = None,
@@ -136,6 +137,20 @@ class ServeEngine:
             raise ValueError(
                 "prefix_store requires cache_mode='paged' with "
                 "prefix_cache=True; it would be silently inert here"
+            )
+        if worker_role not in ("unified", "prefill", "decode"):
+            raise ValueError(
+                f"worker_role must be unified|prefill|decode, got {worker_role!r}"
+            )
+        if worker_role != "unified" and prefix_store is None:
+            # the handoff travels THROUGH the prefix store: a prefill
+            # worker publishes the prompt's chained pages there and a
+            # decode worker demand-hydrates them back.  Without a store
+            # the roles would be silently inert (prefill work unreachable)
+            raise ValueError(
+                "worker_role='prefill'/'decode' requires a prefix_store "
+                "(the KV handoff is storage-mediated); it would be "
+                "silently inert here"
             )
         if dispatch_mode == "grouped" and model.cfg.family in ("ssm", "hybrid"):
             # per-group re-dispatch re-advances recurrent state every extra
@@ -172,11 +187,13 @@ class ServeEngine:
             prefix_match=prefix_match,
             prefix_store=prefix_store,
         )
+        self.worker_role = worker_role
         self.scheduler = RequestScheduler(
             max_batch,
             self.stats,
             refill_policy=refill_policy,
             prefill_token_budget=prefill_token_budget,
+            role=worker_role,
         )
         self.scheduler.cache = self.cache_mgr
         self.cache_mgr.preempt_for = self.scheduler.preempt_for
@@ -208,6 +225,20 @@ class ServeEngine:
             if self._use_prefill
             else None
         )
+        if worker_role == "prefill" and not self._use_prefill:
+            # a prefill-role worker never runs a decode tick, so prompts
+            # MUST ingest through the chunked-prefill path; without it
+            # every admitted request would sit in its slot forever
+            raise ValueError(
+                "worker_role='prefill' requires the fused chunked-prefill "
+                "path (dispatch_mode='fused', prefill_chunk > 0, a "
+                "prefill-capable non-rolling arch)"
+            )
+        if worker_role == "prefill" and speculative != "off":
+            raise ValueError(
+                "speculative decoding never runs on a prefill-role worker "
+                "(it has no decode ticks); it would be silently inert here"
+            )
         self.speculative = speculative
         self.spec_k = int(spec_k)
         self.proposer = None
@@ -401,6 +432,39 @@ class ServeEngine:
         self.stats.tokens_recovered += len(output) - 1
         return req
 
+    # -------------------------------------- disaggregated prefill/decode
+    def submit_handoff(self, rec: Dict) -> Request:
+        """Admit a prefill worker's sealed handoff record on a decode
+        worker.
+
+        A handoff record is the checkpoint format with ``output == []``:
+        the prompt was ingested and its full KV chain (full pages plus
+        the sub-page tail under an extended content key) published by a
+        prefill-role worker, but nothing has been decoded yet — so it
+        cannot go through :meth:`submit_resume` (there is no emitted
+        frontier token to re-derive).  Admission flags the request as a
+        handoff, which routes the prefix stitch through the
+        demand-driven hydration path: the cache manager fetches exactly
+        the chained pages (pinned against eviction while in flight)
+        instead of stopping at free-pool pressure, and counts a fallback
+        if the store cannot cover the prompt (the slot then replays
+        through the normal chunk-prefill ladder, byte-identically).  The
+        first sample draws from the record's preserved stream at step 0,
+        so output matches a monolithic worker token-for-token."""
+        req = Request(
+            uid=rec["uid"],
+            prompt=[int(t) for t in rec["prompt"]],
+            max_new_tokens=int(rec["max_new_tokens"]),
+            temperature=float(rec["temperature"]),
+            stop_token=rec.get("stop_token"),
+        )
+        req.sample_stream = int(rec["sample_stream"])
+        req.handoff = True
+        self.scheduler.submit_handoff(req)
+        self.cache_mgr.on_submit(self.scheduler.pending)
+        self.stats.handoffs_admitted += 1
+        return req
+
     # ------------------------------------------------------------- stepping
     def step(self) -> int:
         """One engine tick.
@@ -425,6 +489,13 @@ class ServeEngine:
         emitted = 0
         if self._use_prefill:
             emitted += self._ingest_prompts()
+        if self.worker_role == "prefill":
+            # prefill-role tick: ingest only.  Each prompt finishes at
+            # ingest completion (published + handed off, zero tokens
+            # sampled) so a decode dispatch here could only be a no-op
+            if os.environ.get("DS_DEBUG_INVARIANTS") == "1":
+                self.cache_mgr.check_invariants()
+            return emitted
         if self.dispatch_mode == "grouped":
             emitted += self._decode_tick_grouped()
         elif self.speculative != "off":
@@ -544,6 +615,20 @@ class ServeEngine:
                     # prefix cache BEFORE accept (which may finish the row
                     # and drop its references)
                     self.cache_mgr.prefix_insert(i, slot.req.prompt)
+                    if self.worker_role == "prefill":
+                        # disaggregated prefill: the full prompt's KV —
+                        # full pages plus the sub-page tail under its
+                        # extended content key — is published while the
+                        # row still holds its pages, then the request
+                        # finishes WITHOUT sampling.  Sampling streams
+                        # are (seed, stream, step)-keyed, so skipping the
+                        # draw consumes no state: the decode worker's
+                        # frontier sample at (stream, 0) is the same
+                        # token a monolith would have emitted here
+                        self.cache_mgr.publish_generation(i, slot.req.prompt)
+                        self.cache_mgr.ensure_chain_published(i, slot.req.prompt)
+                        self.scheduler.finish(i)
+                        continue
                     # the chunk's last-token logits seed generation
                     tok = (
                         int(nxt[i])
@@ -882,6 +967,9 @@ for _name in (
     "checkpoints_published", "checkpoint_resumes", "tokens_recovered",
     "checkpoint_fallbacks", "decode_tokens_discarded",
     "publish_retries", "prefix_store_hash_mismatches",
+    "hydration_fetch_ops", "prefix_store_bytes_fetched", "publish_dedup_hits",
+    "handoffs_published", "handoffs_admitted", "handoff_fallbacks",
+    "handoff_seal_rejects",
 ):
     setattr(ServeEngine, _name, _stats_alias(_name))
 for _name in (

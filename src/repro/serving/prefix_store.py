@@ -73,6 +73,10 @@ class PrefixStore:
         # fetched blobs whose embedded sha256 content digest did not match
         # (bit flips, wrong-content writes): counted misses, never hydrated
         self.hash_mismatches = 0
+        # hydration observability: store round-trips attempted by fetch()
+        # and the blob bytes they actually moved (misses move 0)
+        self.fetch_ops = 0
+        self.bytes_fetched = 0
 
     # ------------------------------------------------------------- keys
     def root_key(self) -> str:
@@ -146,6 +150,7 @@ class PrefixStore:
         a miss rather than corrupting the pool.
         """
         key = self._object_key(page_key)
+        self.fetch_ops += 1
         try:
             blob = self.store.get_bytes(key)
         except (FileNotFoundError, OSError):
@@ -153,6 +158,7 @@ class PrefixStore:
             # an operator sweeping the key prefix: hydration is
             # best-effort, so a swept page is a miss, never a crash
             return None
+        self.bytes_fetched += len(blob)
         try:
             arrays = self.unpack(blob)
         except (ValueError, OSError, zipfile.BadZipFile):
@@ -182,6 +188,23 @@ class PrefixStore:
         """A background publisher bound to this store (one per call)."""
         return AsyncPublisher(self)
 
+    def _pin_key(self, page_key: str) -> str:
+        # pins live OUTSIDE key_prefix/ (string-prefix listing of
+        # "kvprefix/" never sees "kvprefix-pins/..."), so a sweep's page
+        # walk and its pin walk are disjoint
+        return f"{self.key_prefix}-pins/{page_key[:2]}/{page_key}"
+
+    def pin(self, page_key: str) -> None:
+        """Refresh a page's sweep protection: an empty marker object whose
+        mtime restarts the page's TTL clock.  A prefill worker pins every
+        chain key of a handoff it enqueues, so a TTL sweep running
+        between handoff-enqueue and the decode worker's fetch cannot
+        delete the very pages the handoff points at.  Pins are never
+        explicitly removed — they expire by the same TTL (an unpin API
+        would race other workers pinning the same shared prefix), and a
+        stale marker is deleted by the sweep that observes it expired."""
+        self.store.put_bytes(self._pin_key(page_key), b"")
+
     def sweep(self, ttl_s: float, now: Optional[float] = None) -> int:
         """Delete every page under ``key_prefix/`` older than ``ttl_s``
         seconds (by object mtime) and return the count.
@@ -193,14 +216,30 @@ class PrefixStore:
         is the documented exists/read race: :meth:`fetch` treats the
         vanished object as a miss.  ``ttl_s=0`` clears the whole prefix.
         ``now`` defaults to wall-clock time (object mtimes are wall
-        clock even under a virtual-clock harness)."""
+        clock even under a virtual-clock harness).
+
+        Pages with a *fresh* pin marker (see :meth:`pin`) are exempt even
+        when the page object itself is expired: a handoff in flight keeps
+        its chain alive by marker mtime, not by republishing page bytes.
+        Expired markers are swept alongside the pages (and not counted in
+        the return value, which is pages only)."""
         if now is None:
             now = time.time()
         swept = 0
+        # pin walk first: a fresh marker protects its page hash from this
+        # sweep; an expired marker is itself garbage-collected here
+        pinned = set()
+        for info in list(self.store.list(self.key_prefix + "-pins/")):
+            if now - info.mtime < ttl_s:
+                pinned.add(info.key.rsplit("/", 1)[-1])
+            else:
+                self.store.delete(info.key)
         # one listing walk total: list() already carries each object's
         # mtime, and expired pages are deleted individually (delete_prefix
         # would re-walk the whole store root per page)
         for info in list(self.store.list(self.key_prefix + "/")):
+            if info.key.rsplit("/", 1)[-1] in pinned:
+                continue
             if now - info.mtime >= ttl_s:
                 self.store.delete(info.key)
                 swept += 1
@@ -260,17 +299,42 @@ class AsyncPublisher:
         self._lock = threading.Lock()
         self.errors = 0
         self.retries = 0
+        # content keys submitted but not yet written: a second submit of
+        # the same key while the first is still queued is a guaranteed
+        # byte-identical duplicate (keys are content hashes), so it is
+        # dropped before any snapshot/pack work — handoff publishes the
+        # same chain pages a completed-prompt publish may already have
+        # enqueued
+        self._pending: set = set()
+        self.dedup_hits = 0
 
-    def submit(self, page_key: str, arrays: Dict[str, np.ndarray]) -> None:
-        """Enqueue one page write (arrays must already be host-resident
-        snapshots; see class docstring)."""
+    def submit(self, page_key: str, arrays) -> bool:
+        """Enqueue one page write.  ``arrays`` is either a host-resident
+        snapshot dict or a zero-arg callable producing one; a callable is
+        invoked synchronously HERE (submit time — the pool page may be
+        evicted and reissued before the queued write lands), but only
+        when the key is not already pending: a deduplicated submit skips
+        the snapshot and pack entirely.  Returns False (and counts a
+        ``dedup_hits``) when the identical key was already queued."""
         with self._lock:
+            if page_key in self._pending:
+                self.dedup_hits += 1
+                return False
+            self._pending.add(page_key)
             if self._thread is None or not self._thread.is_alive():
                 self._thread = threading.Thread(
                     target=self._run, name="kvprefix-publisher", daemon=True
                 )
                 self._thread.start()
-            self._q.put((page_key, arrays))
+        try:
+            if callable(arrays):
+                arrays = arrays()
+        except BaseException:
+            with self._lock:
+                self._pending.discard(page_key)
+            raise
+        self._q.put((page_key, arrays))
+        return True
 
     def _run(self) -> None:
         while True:
@@ -279,7 +343,11 @@ class AsyncPublisher:
                 if item is self._STOP:
                     return
                 page_key, arrays = item
-                self._publish_with_retry(page_key, arrays)
+                try:
+                    self._publish_with_retry(page_key, arrays)
+                finally:
+                    with self._lock:
+                        self._pending.discard(page_key)
             except Exception:  # noqa: BLE001 - best-effort, never kill the worker
                 self.errors += 1
                 _LOG.exception("async prefix-store publish failed (dropped)")

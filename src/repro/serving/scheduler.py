@@ -50,6 +50,7 @@ class RequestScheduler:
         *,
         refill_policy: str = "continuous",
         prefill_token_budget: Optional[int] = None,
+        role: str = "unified",
     ):
         if refill_policy not in ("continuous", "drain"):
             raise ValueError(
@@ -57,10 +58,20 @@ class RequestScheduler:
             )
         if prefill_token_budget is not None and prefill_token_budget <= 0:
             raise ValueError("prefill_token_budget must be positive or None")
+        if role not in ("unified", "prefill", "decode"):
+            raise ValueError(
+                f"role must be unified|prefill|decode, got {role!r}"
+            )
         self.max_batch = max_batch
         self.stats = stats
         self.refill_policy = refill_policy
         self.prefill_token_budget = prefill_token_budget
+        # disaggregated-serving role: a "decode" scheduler admits ONLY
+        # sealed handoff records (fresh prefill work is refused at
+        # submit — it belongs on the request queue, not here); a
+        # "prefill" scheduler refuses handoffs and never runs a decode
+        # tick (the engine finishes each prompt at ingest completion)
+        self.role = role
         self.slots = [Slot() for _ in range(max_batch)]
         self.pending: List[Request] = []
         self.finished: List[Request] = []
@@ -83,6 +94,14 @@ class RequestScheduler:
 
     # ------------------------------------------------------------- intake
     def submit(self, reqs: List[Request]) -> None:
+        if self.role == "decode":
+            fresh = [r.uid for r in reqs if not r.handoff]
+            if fresh:
+                raise RuntimeError(
+                    "decode-role scheduler refuses fresh prefill work "
+                    f"(uids {fresh}); route it through a prefill worker "
+                    "and submit the sealed handoff via submit_handoff"
+                )
         for r in reqs:
             # per-request sampling stream: submit-order, scheduling-
             # independent, so any admission policy draws identical samples
@@ -91,6 +110,27 @@ class RequestScheduler:
             if r.submit_tick < 0:
                 r.submit_tick = self.tick
         self.pending.extend(reqs)
+
+    def submit_handoff(self, req: Request) -> None:
+        """Queue a request admitted from a prefill worker's sealed
+        handoff record.  Like :meth:`submit_resume` the sampling stream
+        is NOT reassigned — byte-identical decode requires the stream
+        the original request-queue submission drew on the prefill
+        worker — and the local counter advances past it so later local
+        submissions cannot collide.  Unlike a resume the record carries
+        no emitted output, so it queues at the BACK like fresh work
+        (handoffs arrive in decode-queue order; there is no interrupted
+        attempt to get back ahead of)."""
+        if self.role == "prefill":
+            raise RuntimeError(
+                "prefill-role scheduler refuses handoff admissions "
+                f"(uid {req.uid!r}); handoffs are decode-side work"
+            )
+        req.handoff = True
+        self._n_submitted = max(self._n_submitted, req.sample_stream + 1)
+        if req.submit_tick < 0:
+            req.submit_tick = self.tick
+        self.pending.append(req)
 
     def submit_resume(self, req: Request) -> None:
         """Queue a checkpoint-resumed request WITHOUT reassigning its

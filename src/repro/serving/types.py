@@ -48,6 +48,12 @@ class Request:
     # were never emitted on this worker), and the original prompt is
     # recoverable as prompt[:len(prompt) - resume_base]
     resume_base: int = field(default=0, compare=False, repr=False)
+    # admitted from a sealed prefill->decode handoff record: admission
+    # runs the demand-driven hydration path (fetch exactly the chained
+    # pages a prefill worker published) and counts a fallback when the
+    # store cannot cover the prompt.  Decode-role schedulers accept only
+    # these (see RequestScheduler).
+    handoff: bool = field(default=False, compare=False, repr=False)
     # scheduler timing, in engine ticks (compare-excluded: two requests
     # with identical content are interchangeable to the batch).  -1 =
     # not yet reached.  queue wait = admit - submit; time-to-first-token
@@ -165,6 +171,28 @@ class EngineStats:
     # re-verification (counted as misses, never hydrated)
     publish_retries: int = 0
     prefix_store_hash_mismatches: int = 0
+    # [C] hydration observability: store round-trips made to pull KV
+    # pages into the pool (opportunistic + demand-driven) and the bytes
+    # those fetches moved — handoff cost measured, not inferred.  The
+    # publisher-side dedup counter mirrors AsyncPublisher.dedup_hits
+    # (submits skipped because the identical page key was already
+    # pending in its queue).
+    hydration_fetch_ops: int = 0
+    prefix_store_bytes_fetched: int = 0
+    publish_dedup_hits: int = 0
+    # [L]/[C] disaggregated prefill/decode: sealed handoff records a
+    # prefill lease enqueued; handoff records a decode engine admitted
+    # via the guaranteed-hit demand hydration path; admissions where the
+    # store lied (chain pages missing/corrupt) and the slot fell back
+    # down the PR 8 ladder to prefix-hit/full replay; handoff records
+    # rejected at the seal/consistency check before admission.
+    handoffs_published: int = 0
+    handoffs_admitted: int = 0
+    handoff_fallbacks: int = 0
+    handoff_seal_rejects: int = 0
+    # per-demand-hydration store fetch counts (deterministic round-trip
+    # samples; summarized as the "hydration_ticks" percentile block)
+    _hydration_ticks: List = field(default_factory=list)
 
     def snapshot(self) -> Dict[str, int]:
         """Every public counter as a plain dict (RESULTS.json payload),
@@ -177,6 +205,7 @@ class EngineStats:
         snap["accepted_per_dispatch"] = round(
             self.spec_tokens_emitted / self.spec_dispatches, 4
         ) if self.spec_dispatches else 0.0
+        snap["hydration_ticks"] = percentiles(self._hydration_ticks)
         return snap
 
 

@@ -124,6 +124,32 @@ def test_bench_serving_smoke_dispatch_reduction(tmp_path):
     assert rec["sabotage"]["checkpoint_fallbacks"] > 0
     assert rec["sabotage"]["checkpoint_resumes"] == 0
     assert report["recovery_drill"]["redecode_reduction"] >= 3.0
+    # disaggregation drill: at equal hardware both fleet topologies are
+    # byte-identical and lossless (rc=0 above gates the hard failures);
+    # every request travels the storage-mediated handoff path, the
+    # prefill pool never decodes, the decode pool hydrates its KV from
+    # the prefix store, and the decode side strictly beats the monolith
+    # on p99 TTFT and tokens per engine tick — all counter-derived
+    dg = report["disaggregation"]["engines"]
+    dg_n = report["disaggregation"]["scenario"]["n_requests"]
+    for leg in ("monolith", "split"):
+        eng = dg[leg]
+        assert eng["lost_requests"] == 0
+        assert eng["dead_letters"] == 0
+        assert eng["byte_identical"] is True
+    split = dg["split"]
+    assert split["handoffs_published"] == split["handoffs_admitted"] == dg_n
+    assert split["handoff_fallbacks"] == 0
+    assert split["handoff_seal_rejects"] == 0
+    assert dg["monolith"]["handoffs_published"] == 0
+    assert split["roles"]["prefill"]["tokens_emitted"] == 0
+    assert split["roles"]["prefill"]["decode_dispatches"] == 0
+    assert split["prefix_store_pages_hydrated"] > 0
+    assert split["hydration_fetch_ops"] > 0
+    assert split["prefix_store_bytes_fetched"] > 0
+    assert split["ttft_ticks_p99"] < dg["monolith"]["ttft_ticks_p99"]
+    assert split["tokens_per_tick"] > dg["monolith"]["tokens_per_tick"]
+    assert report["disaggregation"]["decode_ttft_p99_reduction"] > 1.0
     # the freshly-generated report must satisfy the published schema,
     # and every scenario block must be gated by this test file
     assert check_bench.check_report(report) == []

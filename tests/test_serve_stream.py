@@ -237,3 +237,93 @@ def test_two_workers_share_prefix_pages_through_object_store(tmp_path):
             assert r["requests"][f"req{i}"]["completion"] == want[f"q{i}"], (
                 f"worker {w} request {i} diverged"
             )
+
+
+def _worker_counters(rt, out):
+    """Per-worker counter records under one output prefix, final
+    RESULTS- summaries superseding slice-cumulative leases/ records
+    (same merge rule the serving benchmarks use)."""
+    recs = {}
+    for info in rt.store.list(f"{out}/leases/"):
+        wid = info.key.rsplit("/", 1)[-1][: -len(".json")]
+        recs[wid] = rt.store.get_json(info.key)
+    for info in rt.store.list(f"{out}/"):
+        name = info.key[len(out) + 1:]
+        if name.startswith("RESULTS-") and name.endswith(".json"):
+            wid = name[len("RESULTS-"): -len(".json")]
+            recs[wid] = rt.store.get_json(info.key)
+    return list(recs.values())
+
+
+def test_disaggregated_prefill_decode_roles_split_the_pipeline(tmp_path):
+    """Role-split serving end to end: a prefill-role permit leases the
+    request queue, publishes each prompt's KV chain through the prefix
+    store and enqueues sealed handoff records; a decode-role permit
+    leases those records, demand-hydrates exactly the chained pages and
+    decodes to completion — byte-identical to a dense monolith, with
+    the prefill side never emitting a token."""
+    clk = VirtualClock()
+    rt = _runtime(tmp_path, clk, machines=2)
+    prompts = [
+        [1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
+        [1, 2, 3, 4, 5, 6, 7, 8, 11, 12, 13],
+        [21, 22, 23],
+        [4, 5],
+    ]
+    n = len(prompts)
+    rq_path = str(tmp_path / "requests.sqlite")
+    dq_path = str(tmp_path / "decode.sqlite")
+    rq = DurableQueue(rq_path, clock=clk)
+    rq.send_batch([
+        {"uid": f"d{i}", "prompt": p, "max_new_tokens": 4}
+        for i, p in enumerate(prompts)
+    ])
+    shared = dict(
+        SHARED,
+        cache_mode="paged",
+        page_size=8,
+        prefix_cache=True,
+        prefix_store=True,
+        stream_slice_ticks=4,
+        stream_idle_polls=200,
+    )
+    rt.submit_job(JobFile(shared=shared, groups=[
+        {"worker_role": "prefill", "request_queue": rq_path,
+         "decode_queue": dq_path, "expected_requests": n,
+         "output_prefix": "serve/dpre"},
+        {"worker_role": "decode", "request_queue": dq_path,
+         "expected_requests": n, "output_prefix": "serve/ddec"},
+    ]))
+    rt.start_cluster(FleetFile(startup_seconds=0.0))
+    summary = SimRunner(rt, tick_seconds=30.0).run(max_ticks=400)
+    assert summary.jobs_done == 2, f"{summary}"
+    # both queues fully drained: every request handed off and acked,
+    # every handoff admitted and acked, nothing dead
+    assert rq.counts() == {"visible": 0, "in_flight": 0, "dead": 0}
+    dq = DurableQueue(dq_path, clock=clk)
+    assert dq.counts() == {"visible": 0, "in_flight": 0, "dead": 0}
+    # one sealed handoff marker per prompt on the prefill side
+    from repro.launch.serve import _handoff_valid
+    for i in range(n):
+        marker = rt.store.get_json(f"serve/dpre/handoffs/d{i}.json")
+        assert _handoff_valid(marker), marker
+        assert marker["prompt"] == prompts[i] and marker["output"] == []
+    # completions land on the decode side, byte-identical to a dense
+    # monolithic engine computing everything from scratch
+    want = _reference_outputs(SHARED, prompts, 4)
+    for i in range(n):
+        rec = rt.store.get_json(f"serve/ddec/requests/d{i}.json")
+        assert rec["prompt"] == prompts[i]
+        assert rec["completion"] == want[f"q{i}"], f"request d{i} diverged"
+    pre = _worker_counters(rt, "serve/dpre")
+    dec = _worker_counters(rt, "serve/ddec")
+    # the split of labor: prefill published every handoff and decoded
+    # nothing; decode admitted every handoff without a single fallback
+    # and pulled real KV bytes out of the store to do it
+    assert sum(r.get("handoffs_published", 0) for r in pre) == n
+    assert sum(r.get("tokens_emitted", 0) for r in pre) == 0
+    assert sum(r.get("handoffs_admitted", 0) for r in dec) == n
+    assert sum(r.get("handoff_fallbacks", 0) for r in dec) == 0
+    assert sum(r.get("prefix_store_pages_hydrated", 0) for r in dec) > 0
+    assert sum(r.get("hydration_fetch_ops", 0) for r in dec) > 0
+    assert sum(r.get("prefix_store_bytes_fetched", 0) for r in dec) > 0
