@@ -76,6 +76,36 @@ DISAGG_KEYS = (
     "publish_dedup_hits", "roles", "byte_identical",
 )
 
+# Keys the schema requires that are NOT EngineStats counters: bench- or
+# fleet-level facts (wall-clock, virtual-time rates, chaos accounting,
+# A/B deltas) computed by bench_serving / the drills, not by snapshot().
+# dslint R4 cross-checks every schema key against EngineStats fields,
+# snapshot()-derived keys, and this set — a renamed counter that leaves
+# its old name in a schema tuple fails tier-1 instead of silently
+# demanding a key no report can carry.  Add here ONLY keys the bench
+# itself derives; counter renames must update the schema tuples.
+DERIVED_KEYS = frozenset({
+    # wall-clock / rate metrics (bench-level, non-deterministic)
+    "wall_s", "tokens_per_sec", "dispatches_per_token",
+    "prompt_tokens_per_prefill_dispatch", "timing",
+    # engine-config echoes
+    "cache_mode", "refill_policy", "roles",
+    # staggered-run scheduling facts
+    "mean_ttft_ticks", "ttft_ticks_p99", "tokens_per_tick",
+    # fleet-drill virtual-time + robustness facts
+    "sim_seconds", "tokens_per_sim_s", "p99_ttft_s", "p99_turnaround_s",
+    "lost_requests", "dead_letters", "revocations_injected",
+    "requests_requeued", "workers_peak", "byte_identical",
+    "tokens_redecoded", "storage_faults", "queue_faults",
+    "prompt_tokens_ingested_serving_side",
+    # block-level A/B derived metrics
+    "dispatch_reduction", "paged_cache_reduction", "prefill_reduction",
+    "peak_reduction_vs_paged", "prefill_reduction_vs_page_aligned",
+    "best_proposer", "tokens_per_sec_vs_off", "dispatch_reduction_vs_off",
+    "ttft_reduction", "p99_ttft_reduction", "redecode_reduction",
+    "decode_ttft_p99_reduction", "decode_tokens_per_tick_vs_monolith",
+})
+
 # scenario block -> (path to its engines dict, required engine names,
 # per-engine required keys, block-level derived metrics)
 SCENARIOS = {

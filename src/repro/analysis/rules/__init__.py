@@ -1,0 +1,30 @@
+"""dslint rule registry.
+
+``ALL_RULES`` is the ordered list the engine runs by default.  Adding a
+rule: write a module here with a ``Rule`` subclass, instantiate it in
+``ALL_RULES``, document it in ``docs/analysis.md``, and add tripping +
+passing fixtures under ``tests/fixtures/dslint/``.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.rules.common import Rule
+from repro.analysis.rules.counters import CounterRegistryRule
+from repro.analysis.rules.determinism import DeterminismRule
+from repro.analysis.rules.durability import DurableBeforeAckRule
+from repro.analysis.rules.kernels import KernelOracleRule
+from repro.analysis.rules.knobs import InertKnobRule
+from repro.analysis.rules.retry import RetryDisciplineRule
+from repro.analysis.rules.threads import ThreadSharedStateRule
+
+ALL_RULES = [
+    RetryDisciplineRule(),
+    DurableBeforeAckRule(),
+    DeterminismRule(),
+    CounterRegistryRule(),
+    ThreadSharedStateRule(),
+    KernelOracleRule(),
+    InertKnobRule(),
+]
+
+__all__ = ["ALL_RULES", "Rule"]

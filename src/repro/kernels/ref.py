@@ -113,3 +113,18 @@ def rmsnorm_reference(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Arra
     xf = x.astype(jnp.float32)
     ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------- registry
+# Op-name -> plain-jnp oracle for every public entry point in
+# ``kernels.ops``.  dslint R6 checks this stays total: a kernel without
+# a registered oracle (and a parity test exercising it) cannot ship.
+# ``paged_verify`` shares ``paged_attention``'s oracle by design — the
+# verify primitive IS the chunk-extend case (T = k + 1).
+ORACLES = {
+    "flash_attention": attention_reference,
+    "paged_attention": paged_attention_reference,
+    "paged_verify": paged_attention_reference,
+    "ssd": ssd_reference,
+    "rmsnorm": rmsnorm_reference,
+}

@@ -93,12 +93,12 @@ from repro.train.checkpoint import latest_step, restore_checkpoint
 # (slice resumes after takeover, post-revocation replacements), and
 # model construction / seed-init / jit tracing dominate a cold build.
 # All three are content-keyed, so sharing across engines is sound.
-_MODEL_CACHE: Dict[tuple, object] = {}
-_PARAM_CACHE: Dict[tuple, object] = {}
+_MODEL_CACHE: Dict[tuple, object] = {}  # dslint: disable=R5(content-keyed memo: concurrent workers racing a cold key rebuild identical values and last-writer-wins on a single GIL-atomic dict store)
+_PARAM_CACHE: Dict[tuple, object] = {}  # dslint: disable=R5(content-keyed memo: same last-writer-wins-identical-value argument as _MODEL_CACHE)
 # warm lease state, keyed (worker_id, request_queue, output_prefix):
 # survives LeaseYield between claims by the same worker; dropped on
 # completion, drain, or crash
-_LEASE_STATES: Dict[tuple, "_LeaseState"] = {}
+_LEASE_STATES: Dict[tuple, "_LeaseState"] = {}  # dslint: disable=R5(keys embed worker_id, so each worker thread only ever touches its own entries; individual dict ops are GIL-atomic)
 
 
 def reset_serve_state() -> None:
@@ -434,7 +434,11 @@ def serve_payload(job: Dict, ctx: WorkerContext) -> Dict:
     }
     out = job.get("output_prefix", "serve/batch0")
     snap = _snapshot(engine)
-    ctx.store.put_json(f"{out}/RESULTS.json", {"requests": results, **snap})
+    results_key = f"{out}/RESULTS.json"
+    _with_retries(
+        lambda: ctx.store.put_json(results_key, {"requests": results, **snap}),
+        key=results_key, clock=ctx.clock,
+    )
     return {"n_requests": len(finished), **snap}
 
 
@@ -557,8 +561,11 @@ def _revocation_drain(ctx: WorkerContext, st: _LeaseState, wid_safe: str) -> Non
     engine.scheduler.pending.clear()
     engine.cache_mgr.flush_store()
     requeued = 0
-    for m in st.inflight.values():
-        if st.rq.change_visibility(m, 0.0):
+    for uid, m in st.inflight.items():
+        if _with_retries(
+            lambda m=m: st.rq.change_visibility(m, 0.0),
+            key=f"drain/{uid}", clock=ctx.clock,
+        ):
             requeued += 1
     engine.stats.drain_requeued_requests += requeued
     _persist_segment(ctx, st, wid_safe)
@@ -630,7 +637,10 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
         # summary includes them.
         return {
             info.key[len(req_prefix):-len(".json")]
-            for info in ctx.store.list(req_prefix)
+            for info in _with_retries(
+                lambda: ctx.store.list(req_prefix),
+                key=req_prefix, clock=ctx.clock,
+            )
             if info.key.endswith(".json")
         }
 
@@ -640,8 +650,14 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
             # spare permit claimed after the fleet already finished:
             # ack it without building an engine
             summary = {"n_requests": 0, "noop": True}
-            if not ctx.store.exists(results_key):
-                ctx.store.put_json(results_key, summary)
+            if not _with_retries(
+                lambda: ctx.store.exists(results_key),
+                key=results_key, clock=ctx.clock,
+            ):
+                _with_retries(
+                    lambda: ctx.store.put_json(results_key, summary),
+                    key=results_key, clock=ctx.clock,
+                )
             return summary
         engine = _build_engine(job, ctx)
         rq = DurableQueue(
@@ -830,8 +846,11 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
             # so durable requeue happens only if THIS worker dies
             now = ctx.clock.now()
             if inflight and now - st.last_ext > vis / 2:
-                for m in inflight.values():
-                    rq.change_visibility(m, vis)
+                for uid, m in inflight.items():
+                    _with_retries(
+                        lambda m=m: rq.change_visibility(m, vis),
+                        key=f"extend/{uid}", clock=ctx.clock,
+                    )
                 st.last_ext = now
             # bound per-lease memory: keep only a recent latency window
             # (the reported percentiles describe it) — Request objects
@@ -892,7 +911,10 @@ def _serve_stream(job: Dict, ctx: WorkerContext) -> Dict:
             lambda k=info.key: ctx.store.get_json(k),
             key=info.key, clock=ctx.clock,
         )
-        for info in ctx.store.list(req_prefix)
+        for info in _with_retries(
+            lambda: ctx.store.list(req_prefix),
+            key=req_prefix, clock=ctx.clock,
+        )
         if info.key.endswith(".json")
     }
     snap = _snapshot(engine)

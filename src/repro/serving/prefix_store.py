@@ -62,6 +62,24 @@ from repro.core.worker import backoff_delay
 _LOG = logging.getLogger(__name__)
 
 
+def _retry_transient(op, *, key: str, attempts: int = 4,
+                     base: float = 0.01, cap: float = 0.25):
+    """Retry a store operation through *transient* faults
+    (``ConnectionError`` — what chaos ``flaky_storage`` and a real S3
+    SDK raise for retryable errors) with capped backoff deterministically
+    jittered by ``key``.  ``FileNotFoundError`` (a plain miss) and every
+    other error propagate immediately; a ``ConnectionError`` that
+    survives all attempts propagates too, so callers keep their
+    miss-vs-crash decision."""
+    for attempt in range(1, attempts + 1):
+        try:
+            return op()
+        except ConnectionError:
+            if attempt == attempts:
+                raise
+            time.sleep(backoff_delay(base, attempt, cap=cap, key=key))
+
+
 class PrefixStore:
     """Content-addressed KV prefix pages over an object store."""
 
@@ -128,14 +146,15 @@ class PrefixStore:
 
     # ------------------------------------------------------------ protocol
     def exists(self, page_key: str) -> bool:
-        return self.store.exists(self._object_key(page_key))
+        key = self._object_key(page_key)
+        return _retry_transient(lambda: self.store.exists(key), key=key)
 
     def publish(self, page_key: str, arrays: Dict[str, np.ndarray]) -> None:
         """Write one page's leaves unconditionally (atomic put), with the
         content digest embedded.  Callers probe :meth:`exists` first to
         skip redundant writes; a lost race is a benign last-writer-wins
         overwrite of identical bytes."""
-        self.store.put_bytes(
+        self.store.put_bytes(  # dslint: disable=R1(every caller retries this put: AsyncPublisher._publish_with_retry re-attempts with content-keyed backoff, and the only synchronous caller is that retry loop)
             self._object_key(page_key), self.pack(arrays, page_key=page_key)
         )
 
@@ -152,7 +171,13 @@ class PrefixStore:
         key = self._object_key(page_key)
         self.fetch_ops += 1
         try:
-            blob = self.store.get_bytes(key)
+            # transient faults are retried first: before PR 10 a chaos
+            # flaky-storage ConnectionError (an OSError subclass) fell
+            # straight into the except below and was miscounted as a
+            # miss, forcing a silent re-prefill of a page that was there
+            blob = _retry_transient(
+                lambda: self.store.get_bytes(key), key=key
+            )
         except (FileNotFoundError, OSError):
             # covers both a plain miss and the exists/read race against
             # an operator sweeping the key prefix: hydration is
@@ -203,7 +228,8 @@ class PrefixStore:
         explicitly removed — they expire by the same TTL (an unpin API
         would race other workers pinning the same shared prefix), and a
         stale marker is deleted by the sweep that observes it expired."""
-        self.store.put_bytes(self._pin_key(page_key), b"")
+        key = self._pin_key(page_key)
+        _retry_transient(lambda: self.store.put_bytes(key, b""), key=key)
 
     def sweep(self, ttl_s: float, now: Optional[float] = None) -> int:
         """Delete every page under ``key_prefix/`` older than ``ttl_s``

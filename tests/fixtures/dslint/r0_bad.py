@@ -1,0 +1,8 @@
+# dslint-role: lease
+"""Trips R0 twice: a pragma with an empty reason, and one naming an
+unknown rule.  The R1 finding itself IS suppressed (hygiene and
+suppression are independent)."""
+
+
+def probe(store, key):
+    return store.exists(key)  # dslint: disable=R1(), R99(not a rule)

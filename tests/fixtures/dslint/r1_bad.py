@@ -1,0 +1,7 @@
+# dslint-role: lease
+"""Trips R1: bare store/queue ops on the lease path."""
+
+
+def persist(store, rq, key, payload, m):
+    store.put_json(key, payload)  # bare durable put
+    rq.delete(m)  # bare ack

@@ -1,0 +1,15 @@
+# dslint-role: lease
+"""Passes R1: every op flows through a retry wrapper."""
+
+
+def _with_retries(op, *, key, clock):
+    for _attempt in range(4):
+        try:
+            return op()
+        except ConnectionError:
+            clock.sleep(0.01)
+
+
+def persist(store, rq, key, payload, m, clock):
+    _with_retries(lambda: store.put_json(key, payload), key=key, clock=clock)
+    _with_retries(lambda: rq.delete(m), key=key, clock=clock)

@@ -1,0 +1,7 @@
+# dslint-role: handler
+"""Trips R2: the ack precedes the durable write it guards."""
+
+
+def process(store, rq, m, key, record):
+    rq.delete(m)  # crash after this line loses the request
+    store.put_json(key, record)

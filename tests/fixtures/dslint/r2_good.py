@@ -1,0 +1,15 @@
+# dslint-role: handler
+"""Passes R2: put-then-delete; and acks/puts in *different* loops are
+independent ordering regions (different message populations)."""
+
+
+def process(store, rq, m, key, record):
+    store.put_json(key, record)
+    rq.delete(m)
+
+
+def drain(store, rq, messages, records):
+    for m in messages:  # acking already-recorded redeliveries
+        rq.delete(m)
+    for key, rec in records:  # unrelated record flush
+        store.put_json(key, rec)

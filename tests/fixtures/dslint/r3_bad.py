@@ -1,0 +1,12 @@
+# dslint-role: tick
+"""Trips R3: wall clock, unseeded RNG, unordered-set iteration."""
+import random
+import time
+
+
+def tick(batch):
+    t = time.time()  # wall clock on the tick path
+    r = random.random()  # unseeded global RNG
+    seen = {3, 1, 2}
+    order = [x for x in seen]  # hash-order iteration
+    return t, r, order

@@ -1,0 +1,12 @@
+# dslint-role: tick
+"""Passes R3: injected clock, seeded RNG, sorted-set iteration;
+set membership/len (no iteration) is fine."""
+import numpy as np
+
+
+def tick(batch, clock, seed):
+    now = clock.now()  # injected virtual clock
+    rng = np.random.default_rng(seed)  # explicitly seeded
+    seen = {3, 1, 2}
+    order = [x for x in sorted(seen)]
+    return now, rng, order, len(seen), 1 in seen

@@ -1,0 +1,16 @@
+"""Trips R5: both the thread target and the caller side mutate
+``self.pending`` with no lock."""
+import threading
+
+
+class Pump:
+    def __init__(self):
+        self.pending = []
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def submit(self, item):
+        self.pending.append(item)  # caller side, unguarded
+
+    def _run(self):
+        while self.pending:
+            self.pending.pop()  # worker side, unguarded

@@ -1,0 +1,33 @@
+"""Passes R5: shared writes are lock-guarded (Pump); a single-writer
+attribute read from the other side is ownership, not contention
+(Gauge)."""
+import threading
+
+
+class Pump:
+    def __init__(self):
+        self.pending = []
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def submit(self, item):
+        with self._lock:
+            self.pending.append(item)
+
+    def _run(self):
+        while True:
+            with self._lock:
+                if self.pending:
+                    self.pending.pop()
+
+
+class Gauge:
+    def __init__(self):
+        self.count = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        self.count += 1  # worker is the only writer
+
+    def read(self):
+        return self.count  # reads are fine from anywhere

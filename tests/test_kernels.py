@@ -114,6 +114,49 @@ def test_paged_attention_vs_reference(T, hkv, g, dtype):
     )
 
 
+@pytest.mark.parametrize("k", [1, 3])  # draft window sizes
+def test_paged_verify_vs_reference(k):
+    """The speculative-verify entry point must match its registered
+    oracle on its own contract — k+1 candidate queries against the
+    accepted history — not merely delegate to whatever paged_attention
+    happens to do (a rewrite of the delegation must keep this green)."""
+    B, dk, ps, P = 3, 32, 8, 4
+    n_pages = 12
+    hkv, g = 2, 4
+    T = k + 1
+    offsets = np.asarray([5, 0, 9], np.int32)
+    k_pages, v_pages = _paged_setup(B, hkv, dk, ps, P, n_pages, offsets)
+    table = _alloc_table(B, P, n_pages, offsets + T, ps)
+    q = jnp.asarray(
+        np.random.default_rng(7).standard_normal((B, T, hkv * g, dk)),
+        jnp.float32,
+    )
+    out = ops.paged_verify(
+        q, k_pages, v_pages, table, jnp.asarray(offsets), interpret=True
+    )
+    oracle = ref.ORACLES["paged_verify"]
+    want = oracle(q, k_pages, v_pages, table, jnp.asarray(offsets))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5
+    )
+
+
+def test_oracle_registry_is_total():
+    """Every public kernels.ops entry point has a registered oracle (the
+    same invariant dslint R6 enforces statically)."""
+    import inspect
+
+    public = {
+        name for name, fn in vars(ops).items()
+        if inspect.isfunction(fn) and fn.__module__ == ops.__name__
+        and not name.startswith("_")
+    }
+    assert public == set(ref.ORACLES), (
+        f"ORACLES registry drift: ops has {sorted(public)}, "
+        f"registry has {sorted(ref.ORACLES)}"
+    )
+
+
 def test_paged_attention_matches_contiguous_reference():
     """Pages laid out contiguously == plain causal attention over the
     logical sequence: the kernel's page indirection is position-exact."""
